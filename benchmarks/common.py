@@ -1,0 +1,25 @@
+"""Shared benchmark plumbing: CSV rows, suite construction, timing."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+SCALE = 0.08          # suite scale for CPU wall-clock runs (stats invariant)
+ITERS = 3
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: Dict[str, Any]
+
+    def csv(self) -> str:
+        d = ";".join(f"{k}={v}" for k, v in self.derived.items())
+        return f"{self.name},{self.us_per_call:.2f},{d}"
+
+
+def print_rows(rows: List[Row]) -> None:
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r.csv())

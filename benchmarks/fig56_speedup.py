@@ -1,0 +1,50 @@
+"""Figs 5 & 6: SP_crs/fmt — SpMV speedup of each format over CRS.
+
+Two columns per (matrix, format), mirroring the paper's two machines:
+  * ``sp_cpu``  — measured wall-clock on this host (the paper's scalar SMP,
+    SR16000 analogue);
+  * ``sp_tpu_model`` — MachineModel roofline prediction for the TPU v5e
+    target (the paper's vector machine, ES2 analogue — same mechanism:
+    ELL's full-lane reductions vs CRS's short segmented reductions).
+
+The paper's thread sweep becomes a row-shard sweep on real hardware; on
+the single CPU device we report the 1-thread point (where the paper also
+sees the cleanest format effects, §4.3 conclusion 1)."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (MachineModel, MatrixStats, TRANSFORMS_HOST, spmv,
+                        time_fn)
+from repro.core.suite import paper_suite
+
+from .common import ITERS, Row, SCALE
+
+FORMATS = ("coo_row", "coo_col", "ell_row", "ell_col", "sell")
+
+
+def run(scale: float = SCALE) -> List[Row]:
+    suite = paper_suite(scale=scale, skip_ell_overflow=True)
+    model = MachineModel()
+    rows: List[Row] = []
+    for name, csr in suite:
+        stats = MatrixStats.of(csr)
+        x = jnp.ones((csr.n_cols,), jnp.float32)
+        jit_spmv = jax.jit(spmv)
+        t_crs = time_fn(jit_spmv, csr, x, iters=ITERS)
+        t_crs_tpu = model.t_spmv("csr", stats)
+        for f in FORMATS:
+            fmt = TRANSFORMS_HOST[f](csr)
+            t = time_fn(jit_spmv, fmt, x, iters=ITERS)
+            t_tpu = model.t_spmv(f, stats, width=(
+                fmt.width if hasattr(fmt, "width") else None))
+            rows.append(Row(
+                name=f"fig56/{name}/{f}",
+                us_per_call=t * 1e6,
+                derived={"sp_cpu": f"{t_crs / t:.2f}",
+                         "sp_tpu_model": f"{t_crs_tpu / t_tpu:.2f}",
+                         "d_mat": f"{stats.d_mat:.3f}"}))
+    return rows

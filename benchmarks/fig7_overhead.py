@@ -1,0 +1,34 @@
+"""Fig 7: TT — transformation overhead in units of one CRS SpMV.
+
+(The paper prints eq. (2) as t_crs/t_trans but its Fig. 7 reads overheads
+of '0.01x-0.51x'; we report the self-consistent t_trans/t_crs — see
+repro.core.autotune module docstring.)"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import TRANSFORMS_HOST, spmv, time_fn
+from repro.core.autotune import time_host
+from repro.core.suite import paper_suite
+
+from .common import ITERS, Row, SCALE
+
+FORMATS = ("coo_row", "coo_col", "ell_row", "sell")
+
+
+def run(scale: float = SCALE) -> List[Row]:
+    suite = paper_suite(scale=scale, skip_ell_overflow=True)
+    rows: List[Row] = []
+    for name, csr in suite:
+        x = jnp.ones((csr.n_cols,), jnp.float32)
+        t_crs = time_fn(jax.jit(spmv), csr, x, iters=ITERS)
+        for f in FORMATS:
+            t_trans = time_host(TRANSFORMS_HOST[f], csr, iters=2)
+            rows.append(Row(
+                name=f"fig7/{name}/{f}",
+                us_per_call=t_trans * 1e6,
+                derived={"tt": f"{t_trans / t_crs:.2f}"}))
+    return rows

@@ -1,0 +1,43 @@
+"""Fig 8: the D_mat–R_ell graph and the learned D* threshold.
+
+Runs the full off-line phase on this machine (measured, SR16000-analogue)
+and against the TPU MachineModel (ES2-analogue), then prints the graph
+points and D* per format for c = 1.0 — the paper's central artifact."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import MachineModel, MatrixStats, offline_phase
+from repro.core.suite import paper_suite
+
+from .common import ITERS, Row, SCALE
+
+FORMATS = ("ell_row", "ell_col", "coo_row", "sell")
+
+
+def run(scale: float = SCALE) -> List[Row]:
+    suite = paper_suite(scale=scale, skip_ell_overflow=True)
+    db = offline_phase(suite, formats=FORMATS, c=1.0, machine="host-cpu",
+                       iters=ITERS)
+    model = MachineModel()
+    rows: List[Row] = []
+    for rec in db.records:
+        for f in FORMATS:
+            m = rec.formats[f]
+            stats = MatrixStats(n=rec.n, nnz=rec.nnz, mu=rec.mu,
+                                sigma=rec.sigma, d_mat=rec.d_mat,
+                                max_row=0, min_row=0)
+            sp_t = model.t_spmv("csr", stats) / model.t_spmv(f, stats)
+            tt_t = model.t_trans(f, stats) / model.t_spmv("csr", stats)
+            rows.append(Row(
+                name=f"fig8/{rec.name}/{f}",
+                us_per_call=m.t_spmv * 1e6,
+                derived={"d_mat": f"{rec.d_mat:.3f}",
+                         "r_cpu": f"{m.r:.3f}",
+                         "r_tpu_model": f"{sp_t / max(tt_t, 1e-9):.3f}",
+                         "sp": f"{m.sp:.2f}", "tt": f"{m.tt:.2f}"}))
+    for f in FORMATS:
+        rows.append(Row(name=f"fig8/D_star/{f}", us_per_call=0.0,
+                        derived={"d_star_cpu": f"{db.d_star[f]:.3f}",
+                                 "c": db.c}))
+    return rows

@@ -1,0 +1,50 @@
+"""Kernel-level SpMV: Pallas (interpret) vs pure-jnp reference wall times
+plus the arithmetic-intensity-derived TPU projection per matrix.
+
+The interpret-mode timing is NOT a TPU number (it executes the kernel body
+in Python); what matters is (a) numerical agreement with the oracle and
+(b) the static byte/flop accounting used in §Roofline.  Wall-clock columns
+compare the jnp reference paths (the auto-tuner's measured backend)."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MatrixStats, host_csr_to_ell, spmv, time_fn
+from repro.core.suite import paper_suite
+from repro.kernels import ops, ref
+
+from .common import Row
+
+
+def run(scale: float = 0.04) -> List[Row]:
+    suite = paper_suite(scale=scale,
+                        include=["chem_master1", "xenon1", "memplus",
+                                 "sme3Da"])
+    rows: List[Row] = []
+    for name, csr in suite:
+        stats = MatrixStats.of(csr)
+        ell = host_csr_to_ell(csr)
+        x = jnp.ones((csr.n_cols,), jnp.float32)
+        t_ref = time_fn(jax.jit(spmv), ell, x, iters=3)
+        d = jnp.asarray(ell.data)
+        c = jnp.asarray(ell.cols)
+        y_kernel = ops.ell_spmv_raw(d, c, x, interpret=True)
+        y_ref = ref.ell_spmv_ref(d, c, x)
+        err = float(jnp.max(jnp.abs(y_kernel - y_ref)))
+        # static accounting: ELL bytes/flops per SpMV
+        padded = ell.n_rows * ell.width
+        bytes_moved = padded * (4 + 4) + csr.n_cols * 4 + ell.n_rows * 4
+        flops = 2 * padded
+        rows.append(Row(
+            name=f"kernels/ell_spmv/{name}",
+            us_per_call=t_ref * 1e6,
+            derived={"kernel_vs_ref_maxerr": f"{err:.2e}",
+                     "bytes": bytes_moved, "flops": flops,
+                     "tpu_mem_bound_us":
+                         f"{bytes_moved / 819e9 * 1e6:.2f}",
+                     "d_mat": f"{stats.d_mat:.3f}"}))
+    return rows

@@ -1,0 +1,73 @@
+"""MoE-dispatch auto-tuning: the paper's method applied inside the LM.
+
+Sweeps routing imbalance (temperature on router logits), measures the ELL
+(capacity) vs CSR (dropless ragged) dispatch wall time, and reports the
+D_mat = sigma/mu of tokens-per-expert for each point — the MoE analogue of
+the D_mat–R_ell graph, from which DEFAULT_D_STAR is read."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.core import time_fn
+from repro.models import init
+from repro.models.moe import (dispatch_d_mat, learn_d_star, moe_csr,
+                              moe_ell, route)
+
+from .common import Row
+
+
+def run() -> List[Row]:
+    cfg = smoke_config(get_config("dbrx-132b")).replace(
+        d_model=128, d_ff=256, n_experts=8, top_k=2, n_layers=2)
+    params = init(cfg, jax.random.PRNGKey(0))["scan"]["pos0"]["moe"]
+    params = jax.tree.map(lambda a: a[0], params)  # one layer's weights
+    B, S = 8, 256
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)).astype(np.float32))
+
+    ell_fn = jax.jit(lambda ids, gw: moe_ell(params, x, ids, gw, cfg))
+    csr_fn = jax.jit(lambda ids, gw: moe_csr(
+        params, x.reshape(B * S, cfg.d_model), ids.reshape(B * S, cfg.top_k),
+        gw.reshape(B * S, cfg.top_k), cfg))
+
+    points = []
+    for skew in (0.0, 1.0, 2.0, 4.0, 8.0):
+        # bias router towards expert 0 to create imbalance
+        logits = rng.normal(size=(B * S, cfg.n_experts)) + \
+            skew * np.eye(1, cfg.n_experts, 0)
+        gw, ids = jax.lax.top_k(jax.nn.softmax(jnp.asarray(
+            logits, jnp.float32)), cfg.top_k)
+        gw = (gw / gw.sum(-1, keepdims=True)).astype(jnp.float32)
+        d_mat = float(dispatch_d_mat(ids, cfg.n_experts))
+        ids_b = ids.reshape(B, S, cfg.top_k)
+        gw_b = gw.reshape(B, S, cfg.top_k)
+        t_ell = time_fn(ell_fn, ids_b, gw_b, iters=3)
+        t_csr = time_fn(csr_fn, ids.astype(jnp.int32), gw, iters=3)
+        # drop fraction under ELL capacity at this imbalance
+        C = max(8, int(cfg.capacity_factor * S * cfg.top_k / cfg.n_experts))
+        counts = np.zeros(cfg.n_experts)
+        for b in range(B):
+            cb = np.bincount(np.asarray(ids_b[b]).ravel(),
+                             minlength=cfg.n_experts)
+            counts += np.maximum(cb - C, 0)
+        dropped = counts.sum() / (B * S * cfg.top_k)
+        rows.append(Row(
+            name=f"moe_dispatch/skew{skew}",
+            us_per_call=t_ell * 1e6,
+            derived={"d_mat": f"{d_mat:.3f}",
+                     "t_ell_us": f"{t_ell*1e6:.1f}",
+                     "t_csr_us": f"{t_csr*1e6:.1f}",
+                     "sp_ell_vs_csr": f"{t_csr/t_ell:.2f}",
+                     "ell_drop_frac": f"{dropped:.3f}"}))
+        points.append((d_mat, t_ell, t_csr, dropped))
+    # the off-line phase product: learned D* for the dispatch rule
+    rows.append(Row(name="moe_dispatch/D_star", us_per_call=0.0,
+                    derived={"d_star": f"{learn_d_star(points):.3f}",
+                             "max_drop_frac": 0.05}))
+    return rows

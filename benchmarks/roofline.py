@@ -1,0 +1,53 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-(arch x shape)
+three-term table (single-pod 16x16, per the spec)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+from .common import Row
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def run(mesh: str = "16x16") -> List[Row]:
+    rows: List[Row] = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        d = json.load(open(f))
+        name = f"roofline/{d['arch']}/{d['shape']}"
+        if d["status"] == "skip":
+            rows.append(Row(name=name, us_per_call=0.0,
+                            derived={"status": "SKIP(design)"}))
+            continue
+        if d["status"] != "ok":
+            rows.append(Row(name=name, us_per_call=0.0,
+                            derived={"status": "ERROR"}))
+            continue
+        r = d["roofline"]
+        a = d.get("analytic")
+        if a:   # prefer the trip-count-aware analytic terms (DESIGN.md §8)
+            t_c, t_m, t_l = a["t_compute"], a["t_memory"], a["t_collective"]
+            bneck = a["bottleneck"]
+            useful = a["useful_ratio"]
+        else:
+            t_c, t_m, t_l = r["t_compute"], r["t_memory"], r["t_collective"]
+            bneck = r["bottleneck"]
+            useful = r["useful_ratio"]
+        t_dom = max(t_c, t_m, t_l)
+        rows.append(Row(
+            name=name,
+            us_per_call=t_dom * 1e6,   # roofline-bound step time
+            derived={
+                "t_compute_ms": f"{t_c*1e3:.2f}",
+                "t_memory_ms": f"{t_m*1e3:.2f}",
+                "t_collective_ms": f"{t_l*1e3:.2f}",
+                "bottleneck": bneck,
+                "useful_ratio": f"{useful:.3f}",
+                "whlo_compute_ms": f"{r['t_compute']*1e3:.2f}",
+                "whlo_collective_ms": f"{r['t_collective']*1e3:.2f}",
+                "peak_gb": f"{d['memory']['peak_bytes']/1e9:.2f}",
+                "fits_16gb": d["memory"]["fits_16gb"],
+            }))
+    return rows

@@ -1,0 +1,53 @@
+"""Benchmark driver — one section per paper table/figure plus the
+integration and roofline suites.  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig8] [--scale S]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from .common import print_rows
+
+
+SECTIONS = ("table1", "fig56", "fig7", "fig8", "moe", "kernels", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help=f"comma list of {SECTIONS}")
+    ap.add_argument("--scale", type=float, default=None,
+                    help="suite scale override (default per-section)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(SECTIONS)
+
+    rows = []
+    t0 = time.time()
+
+    def section(name, fn, **kw):
+        if name not in only:
+            return
+        t = time.time()
+        rows.extend(fn(**kw))
+        print(f"# {name}: {time.time()-t:.1f}s", file=sys.stderr)
+
+    from . import (fig56_speedup, fig7_overhead, fig8_graph, kernels_bench,
+                   moe_dispatch, roofline, table1)
+    scale_kw = {"scale": args.scale} if args.scale else {}
+    section("table1", table1.run, **scale_kw)
+    section("fig56", fig56_speedup.run, **scale_kw)
+    section("fig7", fig7_overhead.run, **scale_kw)
+    section("fig8", fig8_graph.run, **scale_kw)
+    section("moe", moe_dispatch.run)
+    section("kernels", kernels_bench.run)
+    section("roofline", roofline.run)
+
+    print_rows(rows)
+    print(f"# total: {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

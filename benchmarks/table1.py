@@ -1,0 +1,26 @@
+"""Table 1: the test-matrix suite — synthesized stats vs the paper's values."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import MatrixStats
+from repro.core.suite import TABLE1, synthesize
+
+from .common import Row
+
+
+def run(scale: float = 0.08) -> List[Row]:
+    rows = []
+    for spec in TABLE1:
+        m = synthesize(spec, scale=scale)
+        st = MatrixStats.of(m)
+        rows.append(Row(
+            name=f"table1/{spec.name}",
+            us_per_call=0.0,
+            derived={
+                "n": st.n, "nnz": st.nnz,
+                "mu": f"{st.mu:.2f}", "mu_paper": spec.mu,
+                "sigma": f"{st.sigma:.2f}", "sigma_paper": spec.sigma,
+                "d_mat": f"{st.d_mat:.3f}", "d_mat_paper": spec.d_mat,
+            }))
+    return rows

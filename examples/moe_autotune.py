@@ -1,0 +1,38 @@
+"""The paper's decision rule inside an MoE LM: dispatch-format auto-tuning.
+
+Shows D_mat (= sigma/mu of tokens-per-expert) computed per step on device
+and the lax.cond selection between ELL (capacity) and CSR (dropless)
+dispatch — run-time data transformation at zero recompile cost.
+
+    PYTHONPATH=src python examples/moe_autotune.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.models import forward, init
+from repro.models.moe import DEFAULT_D_STAR, dispatch_d_mat, route
+
+cfg = smoke_config(get_config("mixtral-8x22b")).replace(
+    moe_dispatch="auto", capacity_factor=1.25)
+params = init(cfg, jax.random.PRNGKey(0))
+
+print(f"arch={cfg.name} experts={cfg.n_experts} top_k={cfg.top_k} "
+      f"dispatch=auto (D*={DEFAULT_D_STAR})")
+
+rng = np.random.default_rng(0)
+batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 64)))}
+
+# inspect the routing statistics the rule sees
+moe_params = jax.tree.map(lambda a: a[0],
+                          params["scan"]["pos0"])["moe"]
+x = rng.normal(size=(4 * 64, cfg.d_model)).astype(np.float32)
+ids, gw, aux = route(moe_params, jnp.asarray(x), cfg)
+d_mat = float(dispatch_d_mat(ids, cfg.n_experts))
+print(f"tokens-per-expert D_mat = {d_mat:.3f} -> "
+      f"{'ELL (capacity)' if d_mat < DEFAULT_D_STAR else 'CSR (dropless)'}")
+
+logits, aux = jax.jit(lambda p, b: forward(p, b, cfg))(params, batch)
+print(f"forward through auto-dispatch ok: logits {logits.shape}, "
+      f"load-balance aux={float(aux):.4f}")

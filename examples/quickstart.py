@@ -1,0 +1,31 @@
+"""Quickstart: auto-tuned run-time sparse-format transformation in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.core import (AutoTunedSpMV, MatrixStats, offline_phase,
+                        decide_paper)
+from repro.core.suite import paper_suite, synthesize, TABLE1
+
+# ---- off-line phase (once per machine): learn D* from a benchmark suite --
+suite = paper_suite(scale=0.02, skip_ell_overflow=True)
+db = offline_phase(suite, formats=("ell_row", "sell", "coo_row"),
+                   c=1.0, machine="quickstart-cpu", iters=2)
+print("learned D* per format:", {k: round(v, 3)
+                                 for k, v in db.d_star.items()})
+
+# ---- on-line phase (every library call): D_mat -> format decision --------
+for name in ("chem_master1", "memplus"):          # uniform vs heavy-tailed
+    spec = next(s for s in TABLE1 if s.name == name)
+    A = synthesize(spec, scale=0.05)
+    stats = MatrixStats.of(A)
+    decision = decide_paper(db, stats, fmt="ell_row")
+    print(f"{name}: D_mat={stats.d_mat:.3f}  D*={decision.d_star:.3f}"
+          f"  -> {decision.fmt}")
+
+    op = AutoTunedSpMV(A, db=db, rule="paper")    # transforms if profitable
+    x = jnp.ones((A.n_cols,), jnp.float32)
+    y = op(x)
+    print(f"  SpMV ok: ||y||={float(jnp.linalg.norm(y)):.3f} "
+          f"(format={op.decision.fmt})")

@@ -1,0 +1,46 @@
+"""Regenerate the §Roofline tables inside EXPERIMENTS.md from the dry-run
+artifacts (run after any dry-run refresh)."""
+import json, glob, re, sys
+
+def single_pod_table():
+    lines = ["| arch | shape | bneck | An.comp | An.mem | An.coll | wHLO.comp | wHLO.coll | RF(TPU) | peak GB |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for f in sorted(glob.glob("experiments/dryrun/*__16x16.json")):
+        d = json.load(open(f))
+        arch, shape = d["arch"], d["shape"]
+        if d["status"] == "skip":
+            lines.append(f"| {arch} | {shape} | — | SKIP(design) | | | | | | |")
+            continue
+        a = d["analytic"]; r = d["roofline"]; m = d["memory"]
+        dom = max(a["t_compute"], a["t_memory"], a["t_collective"])
+        useful_t = a["model_flops_global"]/256/197e12
+        rf = useful_t/dom if dom else 0
+        lines.append(
+            f"| {arch} | {shape} | {a['bottleneck'][:4]} | "
+            f"{a['t_compute']*1e3:.1f} | {a['t_memory']*1e3:.1f} | "
+            f"{a['t_collective']*1e3:.1f} | {r['hlo_flops']/197e12*1e3:.1f} | "
+            f"{r['collective_bytes']/50e9*1e3:.1f} | {rf:.2f} | "
+            f"{m['peak_bytes']/1e9:.1f} |")
+    return "\n".join(lines)
+
+def multi_pod_table():
+    lines = ["| arch | shape | status | peak GB | An.comp ms | An.coll ms |",
+             "|---|---|---|---|---|---|"]
+    for f in sorted(glob.glob("experiments/dryrun/*__2x16x16.json")):
+        d = json.load(open(f))
+        if d["status"] == "skip":
+            lines.append(f"| {d['arch']} | {d['shape']} | SKIP(design) | | | |")
+            continue
+        a = d["analytic"]; m = d["memory"]
+        lines.append(f"| {d['arch']} | {d['shape']} | ok | "
+                     f"{m['peak_bytes']/1e9:.1f} | {a['t_compute']*1e3:.1f} | "
+                     f"{a['t_collective']*1e3:.1f} |")
+    return "\n".join(lines)
+
+s = open("EXPERIMENTS.md").read()
+s = re.sub(r"\| arch \| shape \| bneck.*?(?=\n\n)", single_pod_table(), s,
+           count=1, flags=re.S)
+s = re.sub(r"\| arch \| shape \| status.*?(?=\n\n|\n## |\Z)",
+           multi_pod_table() + "\n", s, count=1, flags=re.S)
+open("EXPERIMENTS.md", "w").write(s)
+print("tables regenerated")

@@ -1,0 +1,4 @@
+"""repro — auto-tuned run-time sparse-format transformation for SpMV
+(Katagiri & Sato) built out as a multi-pod JAX training/serving framework."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,2 @@
+from .ckpt import (AsyncCheckpointer, available_steps, gc_keep_last,
+                   latest_step, restore, save)

@@ -1,0 +1,165 @@
+"""Sharded, atomic, async checkpointing with elastic re-shard on restore.
+
+Layout (one directory per step):
+    <dir>/step_000042/
+        manifest.json      — tree structure, shapes, dtypes, content hashes
+        leaf_00000.bin.zst — zstd-compressed raw bytes, one file per leaf
+        COMMIT             — written last; a checkpoint without it is
+                             ignored (atomic-commit protocol)
+
+Elastic scaling: leaves are stored as *global* arrays; ``restore`` places
+them under any target sharding tree (load an N-way-trained checkpoint into
+an M-way mesh).  At 1000+-node scale the same manifest format extends to
+per-shard files keyed by shard index — the single-process container stores
+one file per leaf (noted in DESIGN.md §6).
+
+``AsyncCheckpointer`` moves serialization off the training thread and
+keeps the latest K checkpoints (garbage collection)."""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+import zstandard as zstd
+
+
+def _leaf_paths(tree: Any) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+def save(directory: str, step: int, tree: Any,
+         extra: Optional[Dict[str, Any]] = None) -> str:
+    """Write an atomic checkpoint; returns the final path."""
+    final = os.path.join(directory, f"step_{step:09d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    flat, _ = _leaf_paths(tree)
+    cctx = zstd.ZstdCompressor(level=3)
+    manifest: Dict[str, Any] = {"step": step, "extra": extra or {},
+                                "leaves": []}
+    for i, (key, leaf) in enumerate(flat):
+        arr = np.asarray(jax.device_get(leaf))
+        raw = arr.tobytes()
+        fname = f"leaf_{i:05d}.bin.zst"
+        with open(os.path.join(tmp, fname), "wb") as f:
+            f.write(cctx.compress(raw))
+        manifest["leaves"].append({
+            "key": key, "file": fname, "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "sha256": hashlib.sha256(raw).hexdigest(),
+        })
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, "COMMIT"), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def available_steps(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        full = os.path.join(directory, name)
+        if (name.startswith("step_") and not name.endswith(".tmp")
+                and os.path.exists(os.path.join(full, "COMMIT"))):
+            steps.append(int(name.split("_")[1]))
+    return sorted(steps)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = available_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, step: int, target_tree: Any,
+            shardings: Any = None, verify: bool = False) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``target_tree``; if ``shardings`` is
+    given (a matching tree of NamedSharding), leaves are placed sharded —
+    the elastic re-shard path."""
+    path = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_t, treedef = _leaf_paths(target_tree)
+    by_key = {m["key"]: m for m in manifest["leaves"]}
+    shard_flat = (jax.tree_util.tree_leaves(shardings)
+                  if shardings is not None else [None] * len(flat_t))
+    dctx = zstd.ZstdDecompressor()
+    leaves = []
+    for (key, tgt), sh in zip(flat_t, shard_flat):
+        m = by_key[key]
+        with open(os.path.join(path, m["file"]), "rb") as f:
+            raw = dctx.decompress(f.read())
+        if verify:
+            assert hashlib.sha256(raw).hexdigest() == m["sha256"], key
+        arr = np.frombuffer(raw, dtype=np.dtype(m["dtype"])).reshape(
+            m["shape"]).copy()
+        want_shape = tuple(getattr(tgt, "shape", arr.shape))
+        assert tuple(arr.shape) == want_shape, (key, arr.shape, want_shape)
+        leaves.append(jax.device_put(arr, sh) if sh is not None
+                      else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extra"]
+
+
+def gc_keep_last(directory: str, keep: int = 3) -> None:
+    steps = available_steps(directory)
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:09d}"),
+                      ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpointing with at-most-one in flight."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save_async(self, step: int, tree: Any,
+                   extra: Optional[Dict[str, Any]] = None) -> None:
+        self.wait()
+        # materialize on host *before* returning control so the training
+        # step can donate/overwrite device buffers safely
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+
+        def work():
+            try:
+                save(self.directory, step, host_tree, extra)
+                gc_keep_last(self.directory, self.keep)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+
+__all__ = ["save", "restore", "latest_step", "available_steps",
+           "gc_keep_last", "AsyncCheckpointer"]

@@ -1,0 +1,326 @@
+"""Sparse-matrix storage formats as JAX pytrees.
+
+The paper (Katagiri & Sato) studies run-time transformation between CRS
+(a.k.a. CSR), COO (row- and column-ordered) and ELL.  We represent each
+format as a registered-dataclass pytree whose array leaves may be numpy
+(host) or jax.Array (device), with all *structural* metadata (shape, true
+nnz, storage order, pad width) static so the objects cross ``jit``
+boundaries with static shapes — the TPU adaptation of the paper's
+call-time transformation model (§2 of DESIGN.md).
+
+Padding conventions (needed because XLA requires static shapes):
+  * CSR/COO: nnz padded up to ``pad_to`` with (row=0, col=0, val=0) entries —
+    harmless for SpMV since the value is zero.
+  * ELL: ``data``/``cols`` are dense ``(n_rows, width)`` (row order) or
+    ``(width, n_rows)`` (column order, the paper's "ELL-Col" storage);
+    missing band entries hold (col=0, val=0) exactly as the paper describes
+    ("the value of zero is inserted in the position of missing band parts").
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Tuple, Union
+
+import jax
+import numpy as np
+
+Array = Any  # np.ndarray | jax.Array
+
+
+def _register(cls, data_fields, meta_fields):
+    jax.tree_util.register_dataclass(cls, data_fields=list(data_fields),
+                                     meta_fields=list(meta_fields))
+    return cls
+
+
+def _np(x) -> np.ndarray:
+    return np.asarray(x)
+
+
+# ---------------------------------------------------------------------------
+# CSR — the paper's CRS: VAL(1:nnz), ICOL(1:nnz), IRP(1:n+1)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class CSR:
+    data: Array      # (nnz_pad,)  = VAL
+    cols: Array      # (nnz_pad,)  = ICOL
+    indptr: Array    # (n_rows+1,) = IRP
+    shape: Tuple[int, int]
+    nnz: int         # true nnz (<= nnz_pad)
+
+    @property
+    def n_rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def nnz_pad(self) -> int:
+        return int(self.data.shape[0])
+
+    def row_lengths(self) -> np.ndarray:
+        ip = _np(self.indptr)
+        return ip[1:] - ip[:-1]
+
+    def todense(self) -> np.ndarray:
+        out = np.zeros(self.shape, dtype=_np(self.data).dtype)
+        ip, cols, data = _np(self.indptr), _np(self.cols), _np(self.data)
+        for i in range(self.n_rows):
+            s, e = ip[i], ip[i + 1]
+            # duplicate (i, j) entries accumulate, matching SpMV semantics
+            np.add.at(out[i], cols[s:e], data[s:e])
+        return out
+
+
+_register(CSR, ("data", "cols", "indptr"), ("shape", "nnz"))
+
+
+# ---------------------------------------------------------------------------
+# CCS — compressed column storage (paper's Phase-I target)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class CCS:
+    data: Array      # (nnz_pad,)
+    rows: Array      # (nnz_pad,) row index of each stored value
+    indptr: Array    # (n_cols+1,)
+    shape: Tuple[int, int]
+    nnz: int
+
+    @property
+    def n_rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def nnz_pad(self) -> int:
+        return int(self.data.shape[0])
+
+    def todense(self) -> np.ndarray:
+        out = np.zeros(self.shape, dtype=_np(self.data).dtype)
+        ip, rows, data = _np(self.indptr), _np(self.rows), _np(self.data)
+        for j in range(self.n_cols):
+            s, e = ip[j], ip[j + 1]
+            np.add.at(out[:, j], rows[s:e], data[s:e])
+        return out
+
+
+_register(CCS, ("data", "rows", "indptr"), ("shape", "nnz"))
+
+
+# ---------------------------------------------------------------------------
+# COO — VAL, ICOL, IROW; `order` records sortedness ("row" | "col" | None)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class COO:
+    data: Array      # (nnz_pad,)
+    rows: Array      # (nnz_pad,)
+    cols: Array      # (nnz_pad,)
+    shape: Tuple[int, int]
+    nnz: int
+    order: Union[str, None] = "row"
+
+    @property
+    def n_rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def nnz_pad(self) -> int:
+        return int(self.data.shape[0])
+
+    def todense(self) -> np.ndarray:
+        out = np.zeros(self.shape, dtype=_np(self.data).dtype)
+        np.add.at(out, (_np(self.rows), _np(self.cols)), _np(self.data))
+        return out
+
+
+_register(COO, ("data", "rows", "cols"), ("shape", "nnz", "order"))
+
+
+# ---------------------------------------------------------------------------
+# ELL — VAL(1:n, 1:nz): dense padded band storage.
+#   order == "row": data[r, k] is the k-th stored entry of row r
+#                   (paper's ELL-Row; TPU-friendly: row-major, width minor).
+#   order == "col": data[k, r] — the paper's ELL-Col / inner-parallel layout.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ELL:
+    data: Array      # (n_rows, width) or (width, n_rows)
+    cols: Array      # same shape as data; padded entries point at column 0
+    shape: Tuple[int, int]
+    nnz: int
+    order: str = "row"
+
+    @property
+    def n_rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def width(self) -> int:
+        return int(self.data.shape[1] if self.order == "row" else self.data.shape[0])
+
+    def todense(self) -> np.ndarray:
+        data = _np(self.data)
+        cols = _np(self.cols)
+        if self.order == "col":
+            data, cols = data.T, cols.T
+        out = np.zeros(self.shape, dtype=data.dtype)
+        rows = np.broadcast_to(np.arange(self.n_rows)[:, None], data.shape)
+        np.add.at(out, (rows.ravel(), cols.ravel()), data.ravel())
+        return out
+
+
+_register(ELL, ("data", "cols"), ("shape", "nnz", "order"))
+
+
+# ---------------------------------------------------------------------------
+# BucketedELL — beyond-paper SELL-C-σ adaptation (DESIGN.md §2).
+# Rows are sorted by length (σ-sort over the whole matrix), grouped into
+# width buckets; each bucket is a dense ELL block over a contiguous slice of
+# the *permuted* row space.  `perm[i]` = original row of permuted row i.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class BucketedELL:
+    perm: Array                 # (n_rows,) permuted -> original row index
+    buckets: Tuple[ELL, ...]    # each over (bucket_rows, n_cols)
+    row_offsets: Tuple[int, ...]  # static: start row (permuted) of each bucket
+    shape: Tuple[int, int]
+    nnz: int
+
+    @property
+    def n_rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def widths(self) -> Tuple[int, ...]:
+        return tuple(b.width for b in self.buckets)
+
+    def padded_nnz(self) -> int:
+        return sum(int(np.prod(b.data.shape)) for b in self.buckets)
+
+    def todense(self) -> np.ndarray:
+        out = np.zeros(self.shape, dtype=_np(self.buckets[0].data).dtype)
+        perm = _np(self.perm)
+        for off, b in zip(self.row_offsets, self.buckets):
+            dense_b = b.todense()  # (bucket_rows, n_cols)
+            rows = perm[off:off + dense_b.shape[0]]
+            out[rows] += dense_b
+        return out
+
+
+_register(BucketedELL, ("perm", "buckets"), ("row_offsets", "shape", "nnz"))
+
+
+# ---------------------------------------------------------------------------
+# Statistics — the paper's D_mat = sigma / mu (eq. 4)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class MatrixStats:
+    n: int
+    nnz: int
+    mu: float        # mean nnz per row
+    sigma: float     # stddev nnz per row (population, as in the paper)
+    d_mat: float     # sigma / mu
+    max_row: int
+    min_row: int
+
+    @staticmethod
+    def of(mat: "CSR") -> "MatrixStats":
+        lens = mat.row_lengths().astype(np.float64)
+        mu = float(lens.mean())
+        sigma = float(lens.std())
+        return MatrixStats(
+            n=mat.n_rows, nnz=mat.nnz, mu=mu, sigma=sigma,
+            d_mat=sigma / mu if mu > 0 else float("inf"),
+            max_row=int(lens.max()), min_row=int(lens.min()),
+        )
+
+
+def memory_bytes(fmt) -> int:
+    """Storage footprint of a format instance (index + value arrays)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(fmt):
+        total += int(np.prod(leaf.shape)) * _np(leaf).dtype.itemsize
+    return total
+
+
+FORMAT_NAMES = ("csr", "coo_row", "coo_col", "ell_row", "ell_col", "sell")
+
+__all__ = [
+    "CSR", "CCS", "COO", "ELL", "BucketedELL", "MatrixStats",
+    "memory_bytes", "FORMAT_NAMES",
+]
+
+
+# ---------------------------------------------------------------------------
+# BCSR — the paper's named future work ("evaluating the transformation to
+# other formats, such as BCSR, which enables cache blocking").  b x b dense
+# blocks in CSR order: on TPU each block is an MXU-shaped tile, so BCSR
+# SpMV becomes a stream of tiny dense matmuls — the cache-blocking the
+# paper anticipates, mapped to VMEM tiles.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class BCSR:
+    data: Array        # (nblocks_pad, b, b)
+    block_cols: Array  # (nblocks_pad,) block-column indices
+    indptr: Array      # (n_block_rows + 1,)
+    shape: Tuple[int, int]
+    nnz: int           # true scalar nnz represented
+    block: int         # b
+
+    @property
+    def n_rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def n_block_rows(self) -> int:
+        return int(self.indptr.shape[0]) - 1
+
+    @property
+    def nblocks_pad(self) -> int:
+        return int(self.data.shape[0])
+
+    def todense(self) -> np.ndarray:
+        b = self.block
+        nbr = self.n_block_rows
+        out = np.zeros((nbr * b, self.n_cols + (-self.n_cols) % b),
+                       dtype=_np(self.data).dtype)
+        ip = _np(self.indptr)
+        bc = _np(self.block_cols)
+        dat = _np(self.data)
+        for i in range(nbr):
+            for p in range(ip[i], ip[i + 1]):
+                j = bc[p]
+                out[i * b:(i + 1) * b, j * b:(j + 1) * b] += dat[p]
+        return out[: self.n_rows, : self.n_cols]
+
+
+_register(BCSR, ("data", "block_cols", "indptr"), ("shape", "nnz", "block"))
+
+
+def bcsr_fill_ratio(m: "BCSR") -> float:
+    """nnz / stored scalars — the density of the chosen blocks (the BCSR
+    analogue of ELL's padding ratio; drives the same AT cost algebra)."""
+    stored = m.nblocks_pad * m.block * m.block
+    return m.nnz / stored if stored else 0.0

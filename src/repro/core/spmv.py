@@ -1,0 +1,142 @@
+"""Reference SpMV / SpMM per format — pure jnp, jit-able.
+
+These are the *semantic oracles* for the Pallas kernels in
+``repro.kernels`` and the measurable implementations the auto-tuner times.
+
+Parallelization mapping (paper §3 -> TPU):
+  * COO outer-loop + per-thread YY reduction  -> ``segment_sum`` (XLA builds
+    the reduction tree; ``indices_are_sorted`` encodes row- vs col-order).
+  * ELL-Row inner/outer parallelization       -> a single gather + row
+    reduction; XLA/GSPMD parallelizes rows (outer) and the mesh can shard
+    the band axis (inner) — both of the paper's schedules fall out of one
+    expression with different sharding constraints.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .formats import BucketedELL, CCS, COO, CSR, ELL
+
+
+# ---------------------------------------------------------------------------
+# CSR (paper's CRS baseline)
+# ---------------------------------------------------------------------------
+def spmv_csr(m: CSR, x: jax.Array) -> jax.Array:
+    """y = A @ x with A in CSR.  Row ids via binary search (static nnz_pad)."""
+    ip = jnp.asarray(m.indptr)
+    k = jnp.arange(m.nnz_pad)
+    rows = jnp.searchsorted(ip, k, side="right") - 1
+    rows = jnp.clip(rows, 0, m.n_rows - 1)
+    contrib = jnp.asarray(m.data) * x[jnp.asarray(m.cols)]
+    return jax.ops.segment_sum(contrib, rows, num_segments=m.n_rows,
+                               indices_are_sorted=True)
+
+
+def spmm_csr(m: CSR, x: jax.Array) -> jax.Array:
+    """Multi-vector right-hand side: x (n_cols, k) -> (n_rows, k)."""
+    ip = jnp.asarray(m.indptr)
+    kk = jnp.arange(m.nnz_pad)
+    rows = jnp.clip(jnp.searchsorted(ip, kk, side="right") - 1, 0, m.n_rows - 1)
+    contrib = jnp.asarray(m.data)[:, None] * x[jnp.asarray(m.cols)]
+    return jax.ops.segment_sum(contrib, rows, num_segments=m.n_rows,
+                               indices_are_sorted=True)
+
+
+# ---------------------------------------------------------------------------
+# COO (row- or column-ordered; order only affects reduction hints)
+# ---------------------------------------------------------------------------
+def spmv_coo(m: COO, x: jax.Array) -> jax.Array:
+    contrib = jnp.asarray(m.data) * x[jnp.asarray(m.cols)]
+    return jax.ops.segment_sum(contrib, jnp.asarray(m.rows),
+                               num_segments=m.n_rows,
+                               indices_are_sorted=(m.order == "row"))
+
+
+# ---------------------------------------------------------------------------
+# CCS — column-major scatter (paper's Phase-I product)
+# ---------------------------------------------------------------------------
+def spmv_ccs(m: CCS, x: jax.Array) -> jax.Array:
+    ip = jnp.asarray(m.indptr)
+    k = jnp.arange(m.nnz_pad)
+    cols = jnp.clip(jnp.searchsorted(ip, k, side="right") - 1, 0, m.n_cols - 1)
+    contrib = jnp.asarray(m.data) * x[cols]
+    return jnp.zeros(m.n_rows, x.dtype).at[jnp.asarray(m.rows)].add(contrib)
+
+
+# ---------------------------------------------------------------------------
+# ELL — the vector-friendly format (paper's ES2 hero, TPU hero here)
+# ---------------------------------------------------------------------------
+def spmv_ell(m: ELL, x: jax.Array) -> jax.Array:
+    data, cols = jnp.asarray(m.data), jnp.asarray(m.cols)
+    if m.order == "col":
+        data, cols = data.T, cols.T
+    return (data * x[cols]).sum(axis=1)
+
+
+def spmm_ell(m: ELL, x: jax.Array) -> jax.Array:
+    data, cols = jnp.asarray(m.data), jnp.asarray(m.cols)
+    if m.order == "col":
+        data, cols = data.T, cols.T
+    # (rows, width, k) contract width
+    return jnp.einsum("rw,rwk->rk", data, x[cols])
+
+
+# ---------------------------------------------------------------------------
+# BucketedELL (SELL-C-sigma adaptation)
+# ---------------------------------------------------------------------------
+def spmv_sell(m: BucketedELL, x: jax.Array) -> jax.Array:
+    y = jnp.zeros(m.n_rows, x.dtype)
+    perm = jnp.asarray(m.perm)
+    for off, b in zip(m.row_offsets, m.buckets):
+        yb = spmv_ell(b, x)
+        y = y.at[perm[off:off + b.n_rows]].set(yb)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+def spmv(m, x: jax.Array) -> jax.Array:
+    from .formats import BCSR
+    if isinstance(m, BCSR):
+        return spmv_bcsr(m, x)
+    if isinstance(m, CSR):
+        return spmv_csr(m, x)
+    if isinstance(m, COO):
+        return spmv_coo(m, x)
+    if isinstance(m, CCS):
+        return spmv_ccs(m, x)
+    if isinstance(m, ELL):
+        return spmv_ell(m, x)
+    if isinstance(m, BucketedELL):
+        return spmv_sell(m, x)
+    raise TypeError(f"unknown sparse format: {type(m)}")
+
+
+def spmv_dense(dense: jax.Array, x: jax.Array) -> jax.Array:
+    return dense @ x
+
+
+__all__ = ["spmv", "spmv_csr", "spmm_csr", "spmv_coo", "spmv_ccs",
+           "spmv_ell", "spmm_ell", "spmv_sell", "spmv_dense"]
+
+
+def spmv_bcsr(m, x: jax.Array) -> jax.Array:
+    """y = A @ x, A in BCSR: a stream of b x b dense block matvecs —
+    gathered x block-slices times block tiles, segment-summed per block
+    row (the MXU-tile form of the paper's anticipated cache blocking)."""
+    from .formats import BCSR
+    assert isinstance(m, BCSR)
+    b = m.block
+    nbr = m.n_block_rows
+    ip = jnp.asarray(m.indptr)
+    k = jnp.arange(m.nblocks_pad)
+    brow = jnp.clip(jnp.searchsorted(ip, k, side="right") - 1, 0, nbr - 1)
+    ncb = (m.n_cols + b - 1) // b
+    x_pad = jnp.pad(x, (0, ncb * b - m.n_cols))
+    x_blocks = x_pad.reshape(ncb, b)[jnp.asarray(m.block_cols)]  # (nb, b)
+    contrib = jnp.einsum("kij,kj->ki", jnp.asarray(m.data), x_blocks)
+    y = jax.ops.segment_sum(contrib, brow, num_segments=nbr,
+                            indices_are_sorted=True)             # (nbr, b)
+    return y.reshape(nbr * b)[: m.n_rows]

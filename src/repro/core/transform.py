@@ -1,0 +1,337 @@
+"""Run-time sparse-format transformations (paper §2.1).
+
+Two implementation paths:
+
+* ``host_*`` — numpy, executed at library-call time exactly like the paper's
+  Fortran code.  ``host_csr_to_ccs_paper`` is a literal loop-for-loop
+  translation of the paper's counting algorithm and is used as the oracle
+  for the vectorized versions.
+* ``device_*`` — pure ``jnp``, jit-able, so the transformation itself can run
+  on the accelerator and be costed on the roofline.  Static output widths /
+  nnz pads are trace-time constants (computed host-side from the matrix
+  stats, which are known at call time — same run-time model as the paper).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import CSR, CCS, COO, ELL, BucketedELL
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def pad_to_multiple(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _pad1(x: np.ndarray, n_pad: int, fill=0) -> np.ndarray:
+    out = np.full((n_pad,), fill, dtype=x.dtype)
+    out[: x.shape[0]] = x
+    return out
+
+
+# ---------------------------------------------------------------------------
+# construction from dense / random (host)
+# ---------------------------------------------------------------------------
+def csr_from_dense(dense: np.ndarray, pad: int = 1) -> CSR:
+    dense = np.asarray(dense)
+    n_rows, n_cols = dense.shape
+    rows, cols = np.nonzero(dense)
+    data = dense[rows, cols]
+    nnz = data.shape[0]
+    indptr = np.zeros(n_rows + 1, dtype=np.int32)
+    np.add.at(indptr, rows + 1, 1)
+    indptr = np.cumsum(indptr).astype(np.int32)
+    nnz_pad = max(pad_to_multiple(nnz, pad), pad)
+    return CSR(
+        data=_pad1(data.astype(dense.dtype), nnz_pad),
+        cols=_pad1(cols.astype(np.int32), nnz_pad),
+        indptr=indptr,
+        shape=(n_rows, n_cols),
+        nnz=nnz,
+    )
+
+
+def csr_from_rows(row_cols: Sequence[np.ndarray], row_vals: Sequence[np.ndarray],
+                  n_cols: int, pad: int = 1, dtype=np.float32) -> CSR:
+    """Build CSR from per-row (cols, vals) lists — the suite generator path."""
+    n_rows = len(row_cols)
+    lens = np.fromiter((len(c) for c in row_cols), count=n_rows, dtype=np.int64)
+    nnz = int(lens.sum())
+    indptr = np.zeros(n_rows + 1, dtype=np.int32)
+    np.cumsum(lens, out=indptr[1:])
+    cols = (np.concatenate(row_cols).astype(np.int32) if nnz
+            else np.zeros(0, np.int32))
+    data = (np.concatenate(row_vals).astype(dtype) if nnz
+            else np.zeros(0, dtype))
+    nnz_pad = max(pad_to_multiple(nnz, pad), pad)
+    return CSR(data=_pad1(data, nnz_pad), cols=_pad1(cols, nnz_pad),
+               indptr=indptr, shape=(n_rows, n_cols), nnz=nnz)
+
+
+# ---------------------------------------------------------------------------
+# CRS -> COO-Row (host): trivial, row ids from IRP (paper: "easy" direction)
+# ---------------------------------------------------------------------------
+def host_csr_to_coo_row(m: CSR) -> COO:
+    ip = np.asarray(m.indptr)
+    lens = ip[1:] - ip[:-1]
+    rows = np.repeat(np.arange(m.n_rows, dtype=np.int32), lens)
+    return COO(data=np.asarray(m.data).copy(),
+               rows=_pad1(rows, m.nnz_pad),
+               cols=np.asarray(m.cols).copy(),
+               shape=m.shape, nnz=m.nnz, order="row")
+
+
+# ---------------------------------------------------------------------------
+# CRS -> CCS (host): the paper's Phase-I counting algorithm.
+# ---------------------------------------------------------------------------
+def host_csr_to_ccs_paper(m: CSR) -> CCS:
+    """Literal translation of the paper's Fortran (§2.1) — O(n + nnz) loops.
+
+    Used as the oracle for the vectorized version; quadratic-free but slow in
+    Python, so tests call it on small matrices only.
+    """
+    n, nnz = m.n_rows, m.nnz
+    VAL = np.asarray(m.data)
+    ICOL = np.asarray(m.cols)
+    IRP = np.asarray(m.indptr)
+    # === Count the number of non-zero columns.
+    NC_IRP = np.zeros(m.n_cols, dtype=np.int64)
+    for i in range(n):
+        for j_ptr in range(IRP[i], IRP[i + 1]):
+            NC_IRP[ICOL[j_ptr]] += 1
+    # === Set IRP.
+    IRP_T = np.zeros(m.n_cols + 1, dtype=np.int64)
+    IRP_T[0] = 0
+    for j in range(1, m.n_cols + 1):
+        IRP_T[j] = IRP_T[j - 1] + NC_IRP[j - 1]
+    cursor = IRP_T[:-1].copy()
+    # === Set row numbers (paper stores ICOL_T(K) = I, i.e. the row index).
+    VAL_T = np.zeros(nnz, dtype=VAL.dtype)
+    IROW_T = np.zeros(nnz, dtype=np.int32)
+    for i in range(n):
+        for j_ptr in range(IRP[i], IRP[i + 1]):
+            jj = ICOL[j_ptr]
+            k = cursor[jj]
+            cursor[jj] += 1
+            VAL_T[k] = VAL[j_ptr]
+            IROW_T[k] = i
+    return CCS(data=_pad1(VAL_T, m.nnz_pad), rows=_pad1(IROW_T, m.nnz_pad),
+               indptr=IRP_T.astype(np.int32), shape=m.shape, nnz=nnz)
+
+
+def host_csr_to_ccs(m: CSR) -> CCS:
+    """Vectorized counting sort — same output order as the paper's algorithm
+    (stable within a column by row index, because CSR scans rows in order)."""
+    nnz = m.nnz
+    cols = np.asarray(m.cols)[:nnz]
+    data = np.asarray(m.data)[:nnz]
+    ip = np.asarray(m.indptr)
+    rows = np.repeat(np.arange(m.n_rows, dtype=np.int32), ip[1:] - ip[:-1])
+    counts = np.bincount(cols, minlength=m.n_cols)
+    indptr = np.zeros(m.n_cols + 1, dtype=np.int32)
+    np.cumsum(counts, out=indptr[1:])
+    order = np.argsort(cols, kind="stable")
+    return CCS(data=_pad1(data[order], m.nnz_pad),
+               rows=_pad1(rows[order], m.nnz_pad),
+               indptr=indptr, shape=m.shape, nnz=nnz)
+
+
+# ---------------------------------------------------------------------------
+# CRS -> COO-Column (host): Phase II on top of CCS (paper: "easy" given CCS)
+# ---------------------------------------------------------------------------
+def host_csr_to_coo_col(m: CSR) -> COO:
+    ccs = host_csr_to_ccs(m)
+    ip = np.asarray(ccs.indptr)
+    lens = ip[1:] - ip[:-1]
+    cols = np.repeat(np.arange(m.n_cols, dtype=np.int32), lens)
+    return COO(data=np.asarray(ccs.data).copy(),
+               rows=np.asarray(ccs.rows).copy(),
+               cols=_pad1(cols, m.nnz_pad),
+               shape=m.shape, nnz=m.nnz, order="col")
+
+
+# ---------------------------------------------------------------------------
+# CRS -> ELL (host)
+# ---------------------------------------------------------------------------
+def host_csr_to_ell(m: CSR, order: str = "row",
+                    width: Optional[int] = None) -> ELL:
+    ip = np.asarray(m.indptr)
+    lens = ip[1:] - ip[:-1]
+    w = int(width if width is not None else (lens.max() if len(lens) else 0))
+    w = max(w, 1)
+    n = m.n_rows
+    data = np.zeros((n, w), dtype=np.asarray(m.data).dtype)
+    cols = np.zeros((n, w), dtype=np.int32)
+    # gather positions: pos[r, k] = indptr[r] + k, valid where k < len(r)
+    pos = ip[:-1, None] + np.arange(w)[None, :]
+    valid = np.arange(w)[None, :] < lens[:, None]
+    src_d = np.asarray(m.data)
+    src_c = np.asarray(m.cols)
+    np.copyto(data, src_d[np.clip(pos, 0, m.nnz_pad - 1)], where=valid)
+    np.copyto(cols, src_c[np.clip(pos, 0, m.nnz_pad - 1)], where=valid)
+    if not valid.all():
+        data[~valid] = 0
+        cols[~valid] = 0
+    if order == "col":
+        data, cols = np.ascontiguousarray(data.T), np.ascontiguousarray(cols.T)
+    nnz_kept = int(np.minimum(lens, w).sum())
+    return ELL(data=data, cols=cols, shape=m.shape, nnz=nnz_kept, order=order)
+
+
+# ---------------------------------------------------------------------------
+# CRS -> BucketedELL (beyond paper; SELL-C-sigma TPU adaptation)
+# ---------------------------------------------------------------------------
+def host_csr_to_sell(m: CSR, slice_rows: int = 128,
+                     width_quantum: int = 8) -> BucketedELL:
+    """Sort rows by length, group into slices of ``slice_rows`` rows, round
+    each slice's width up to ``width_quantum`` and merge equal-width
+    neighboring slices into buckets.  Each bucket is a dense ELL block."""
+    ip = np.asarray(m.indptr)
+    lens = ip[1:] - ip[:-1]
+    n = m.n_rows
+    perm = np.argsort(-lens, kind="stable").astype(np.int32)  # longest first
+    sorted_lens = lens[perm]
+    src_d, src_c = np.asarray(m.data), np.asarray(m.cols)
+
+    # slice boundaries -> per-slice rounded widths -> merge equal-width runs
+    starts = list(range(0, n, slice_rows))
+    widths = [pad_to_multiple(max(int(sorted_lens[s:min(s + slice_rows, n)].max()), 1),
+                              width_quantum) for s in starts]
+    merged: list = []  # (start, end, w)
+    for s, w in zip(starts, widths):
+        e = min(s + slice_rows, n)
+        if merged and merged[-1][2] == w:
+            merged[-1] = (merged[-1][0], e, w)
+        else:
+            merged.append((s, e, w))
+
+    buckets = []
+    offsets = []
+    for start, end, w in merged:
+        rows_here = perm[start:end]
+        b_n = end - start
+        data = np.zeros((b_n, w), dtype=src_d.dtype)
+        cols = np.zeros((b_n, w), dtype=np.int32)
+        pos = ip[rows_here][:, None] + np.arange(w)[None, :]
+        valid = np.arange(w)[None, :] < lens[rows_here][:, None]
+        np.copyto(data, src_d[np.clip(pos, 0, m.nnz_pad - 1)], where=valid)
+        np.copyto(cols, src_c[np.clip(pos, 0, m.nnz_pad - 1)], where=valid)
+        nnz_b = int(valid.sum())
+        buckets.append(ELL(data=data, cols=cols, shape=(b_n, m.n_cols),
+                           nnz=nnz_b, order="row"))
+        offsets.append(start)
+    return BucketedELL(perm=perm, buckets=tuple(buckets),
+                       row_offsets=tuple(offsets), shape=m.shape, nnz=m.nnz)
+
+
+# ---------------------------------------------------------------------------
+# device transformations (pure jnp; static widths / pads)
+# ---------------------------------------------------------------------------
+def device_csr_to_ell(m: CSR, width: int, order: str = "row") -> ELL:
+    """jit-able CRS->ELL.  ``width`` must be a static (host-known) bound —
+    available at call time from MatrixStats, per the paper's run-time model."""
+    ip = jnp.asarray(m.indptr)
+    lens = ip[1:] - ip[:-1]
+    pos = ip[:-1, None] + jnp.arange(width, dtype=ip.dtype)[None, :]
+    valid = jnp.arange(width)[None, :] < lens[:, None]
+    posc = jnp.clip(pos, 0, m.nnz_pad - 1)
+    data = jnp.where(valid, jnp.asarray(m.data)[posc], 0)
+    cols = jnp.where(valid, jnp.asarray(m.cols)[posc], 0)
+    if order == "col":
+        data, cols = data.T, cols.T
+    return ELL(data=data, cols=cols, shape=m.shape, nnz=m.nnz, order=order)
+
+
+def device_csr_to_coo_row(m: CSR) -> COO:
+    """jit-able CRS->COO-Row: row ids by binary search over IRP."""
+    ip = jnp.asarray(m.indptr)
+    k = jnp.arange(m.nnz_pad, dtype=ip.dtype)
+    rows = jnp.searchsorted(ip, k, side="right") - 1
+    rows = jnp.where(k < m.nnz, rows, 0).astype(jnp.int32)
+    return COO(data=jnp.asarray(m.data), rows=rows,
+               cols=jnp.asarray(m.cols), shape=m.shape, nnz=m.nnz,
+               order="row")
+
+
+def device_csr_to_coo_col(m: CSR) -> COO:
+    """jit-able CRS->COO-Column: sentinel-keyed stable sort = counting sort.
+
+    Padded entries get key n_cols so they stay at the tail, preserving the
+    padding invariant."""
+    coo = device_csr_to_coo_row(m)
+    k = jnp.arange(m.nnz_pad)
+    key = jnp.where(k < m.nnz, jnp.asarray(coo.cols), m.n_cols)
+    order = jnp.argsort(key, stable=True)
+    return COO(data=coo.data[order], rows=coo.rows[order],
+               cols=jnp.where(k < m.nnz, coo.cols[order], 0),
+               shape=m.shape, nnz=m.nnz, order="col")
+
+
+def device_csr_to_ccs(m: CSR) -> CCS:
+    """jit-able Phase-I (CRS->CCS), the paper's bottleneck transformation."""
+    coo = device_csr_to_coo_col(m)
+    counts = jnp.zeros(m.n_cols, jnp.int32).at[jnp.asarray(m.cols)].add(
+        (jnp.arange(m.nnz_pad) < m.nnz).astype(jnp.int32))
+    indptr = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                              jnp.cumsum(counts).astype(jnp.int32)])
+    return CCS(data=coo.data, rows=coo.rows, indptr=indptr,
+               shape=m.shape, nnz=m.nnz)
+
+
+TRANSFORMS_HOST = {
+    "bcsr": lambda m: host_csr_to_bcsr(m),
+    "coo_row": host_csr_to_coo_row,
+    "coo_col": host_csr_to_coo_col,
+    "ell_row": lambda m: host_csr_to_ell(m, order="row"),
+    "ell_col": lambda m: host_csr_to_ell(m, order="col"),
+    "sell": host_csr_to_sell,
+    "csr": lambda m: m,
+}
+
+__all__ = [
+    "pad_to_multiple", "csr_from_dense", "csr_from_rows",
+    "host_csr_to_coo_row", "host_csr_to_ccs_paper", "host_csr_to_ccs",
+    "host_csr_to_coo_col", "host_csr_to_ell", "host_csr_to_sell",
+    "device_csr_to_ell", "device_csr_to_coo_row", "device_csr_to_coo_col",
+    "device_csr_to_ccs", "host_csr_to_bcsr", "TRANSFORMS_HOST",
+]
+
+
+# ---------------------------------------------------------------------------
+# CRS -> BCSR (paper's named future work; see formats.BCSR)
+# ---------------------------------------------------------------------------
+def host_csr_to_bcsr(m: CSR, block: int = 8) -> "BCSR":
+    """Group nonzeros into b x b dense blocks (CSR order over block rows)."""
+    from .formats import BCSR
+    b = block
+    n_rows, n_cols = m.shape
+    nbr = (n_rows + b - 1) // b
+    ip = np.asarray(m.indptr)
+    cols = np.asarray(m.cols)[: m.nnz]
+    data = np.asarray(m.data)[: m.nnz]
+    rows = np.repeat(np.arange(n_rows, dtype=np.int64), ip[1:] - ip[:-1])
+    br, bc = rows // b, cols // b
+    key = br * ((n_cols + b - 1) // b) + bc
+    order = np.argsort(key, kind="stable")
+    key_s = key[order]
+    uniq, starts = np.unique(key_s, return_index=True)
+    nblocks = len(uniq)
+    blocks = np.zeros((max(nblocks, 1), b, b), dtype=data.dtype)
+    block_cols = np.zeros(max(nblocks, 1), dtype=np.int32)
+    indptr = np.zeros(nbr + 1, dtype=np.int32)
+    ends = np.append(starts[1:], len(key_s))
+    nbc = (n_cols + b - 1) // b
+    for bi, (u, s0, s1) in enumerate(zip(uniq, starts, ends)):
+        sel = order[s0:s1]
+        np.add.at(blocks[bi], (rows[sel] % b, cols[sel] % b), data[sel])
+        block_cols[bi] = u % nbc
+        indptr[u // nbc + 1] += 1
+    indptr = np.cumsum(indptr).astype(np.int32)
+    return BCSR(data=blocks, block_cols=block_cols, indptr=indptr,
+                shape=m.shape, nnz=m.nnz, block=b)

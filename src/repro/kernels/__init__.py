@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the paper's compute hot spot (SpMV/SpMM) with
+jit wrappers (ops) and pure-jnp oracles (ref)."""
+from . import ops, ref
+from .ell_spmv import ell_spmv, ell_spmm
+from .coo_spmv import coo_spmv
+from .decode_attention import decode_attention_int8

@@ -1,0 +1,57 @@
+"""COO SpMV Pallas kernel (covers CSR via the IRP->IROW row expansion).
+
+TPU adaptation note (DESIGN.md §2): the paper's COO outer-loop OpenMP
+schedule gives each thread an nnz slab plus a private YY(N) partial vector
+reduced at the end.  The TPU version keeps that exact structure: the grid
+walks nnz slabs *sequentially* (grid axis marked arbitrary) and accumulates
+into a full-length y resident in VMEM — VMEM is the "private YY" and the
+sequential grid replaces the end reduction.  The within-slab scatter-add is
+a VPU serial scatter on real TPUs; this is precisely the irregularity that
+makes COO/CSR lose to ELL on vector hardware (the paper's central finding),
+so this kernel exists as the *baseline* the auto-tuner migrates away from.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _coo_spmv_kernel(data_ref, rows_ref, cols_ref, x_ref, y_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    contrib = (data_ref[...].astype(jnp.float32) *
+               x_ref[...].astype(jnp.float32)[cols_ref[...]])
+    y_ref[...] = y_ref[...].at[rows_ref[...]].add(contrib)
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "block_nnz",
+                                             "interpret"))
+def coo_spmv(data: jax.Array, rows: jax.Array, cols: jax.Array,
+             x: jax.Array, *, n_rows: int, block_nnz: int = 4096,
+             interpret: bool = True) -> jax.Array:
+    """y = A @ x, A in COO (any order; padded entries must be (0,0,0.0))."""
+    (nnz_pad,) = data.shape
+    assert nnz_pad % block_nnz == 0, (nnz_pad, block_nnz)
+    grid = (nnz_pad // block_nnz,)
+    out_dtype = jnp.result_type(data.dtype, x.dtype)
+    y32 = pl.pallas_call(
+        _coo_spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_nnz,), lambda i: (i,)),
+            pl.BlockSpec((block_nnz,), lambda i: (i,)),
+            pl.BlockSpec((block_nnz,), lambda i: (i,)),
+            pl.BlockSpec(x.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n_rows,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_rows,), jnp.float32),
+        interpret=interpret,
+    )(data, rows, cols, x)
+    return y32.astype(out_dtype)

@@ -1,0 +1,124 @@
+"""ELL SpMV / SpMM Pallas TPU kernel — the paper's hero format.
+
+TPU mapping of the paper's §3.3/§3.4 parallelizations:
+  * the N-loop (rows) becomes the *parallel* grid axis, tiled in
+    ``block_rows`` chunks (paper's "outer" parallelization);
+  * the NE-loop (band) becomes the sequential accumulation axis, tiled in
+    ``block_w`` lanes (paper's "inner" parallelization) — both schedules
+    coexist in one kernel because the mesh/grid split covers both.
+
+VMEM strategy: the dense x vector is pinned whole in VMEM (n_cols * 4 B;
+up to ~1M columns fits the ~16 MB of a v5e core alongside the tiles), while
+the (rows, width) VAL/ICOL panels stream through in
+(block_rows, block_w) blocks.  The inner product is a VPU gather
+(x[ICOL-block]) followed by a dense multiply-reduce over the minor
+(lane-aligned) axis — full lane utilization, unlike CSR's short
+row-segmented reductions.  This is exactly why the paper's ES2 vector
+pipes love ELL; the TPU inherits the preference.
+
+Block alignment: block_rows % 8 == 0 (sublane), block_w % 128 == 0 (lane).
+The ops.py wrapper pads inputs to these multiples (pad entries: val=0,
+col=0 — contributing zero, the paper's own padding convention).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ell_spmv_kernel(data_ref, cols_ref, x_ref, y_ref):
+    """Grid = (row_blocks, w_blocks); w is the sequential accumulation axis.
+    Accumulation is always f32 (standard MXU/VPU practice for bf16 inputs)."""
+    j = pl.program_id(1)
+    x = x_ref[...]
+    gathered = x[cols_ref[...]]                 # (block_rows, block_w) gather
+    partial = jnp.sum(data_ref[...].astype(jnp.float32) *
+                      gathered.astype(jnp.float32), axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        y_ref[...] = y_ref[...] + partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_w",
+                                             "interpret"))
+def ell_spmv(data: jax.Array, cols: jax.Array, x: jax.Array, *,
+             block_rows: int = 256, block_w: int = 128,
+             interpret: bool = True) -> jax.Array:
+    """y = A @ x, A in ELL-Row: data/cols (n_rows, width), x (n_cols,).
+
+    Shapes must already be block-aligned (see ops.ell_spmv for the padding
+    wrapper).  Returns (n_rows,) in x.dtype's result type."""
+    n_rows, width = data.shape
+    assert n_rows % block_rows == 0 and width % block_w == 0, (
+        f"unaligned ELL shapes {data.shape} for blocks "
+        f"({block_rows},{block_w})")
+    grid = (n_rows // block_rows, width // block_w)
+    out_dtype = jnp.result_type(data.dtype, x.dtype)
+    y32 = pl.pallas_call(
+        _ell_spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, block_w), lambda i, j: (i, j)),
+            pl.BlockSpec((block_rows, block_w), lambda i, j: (i, j)),
+            pl.BlockSpec(x.shape, lambda i, j: (0,)),     # x whole in VMEM
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_rows,), jnp.float32),
+        interpret=interpret,
+    )(data, cols, x)
+    return y32.astype(out_dtype)
+
+
+def _ell_spmm_kernel(data_ref, cols_ref, x_ref, y_ref):
+    """SpMM: multi-vector RHS x (n_cols, k).  Grid = (row_blocks, k_blocks,
+    w_blocks); w is innermost (sequential accumulation — consecutive visits
+    to each output block, as TPU Pallas requires), rows/k parallel."""
+    j = pl.program_id(2)
+    x = x_ref[...]                               # (n_cols, block_k)
+    gathered = x[cols_ref[...], :]               # (br, bw, block_k)
+    partial = jnp.einsum("rw,rwk->rk", data_ref[...], gathered,
+                         preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        y_ref[...] = y_ref[...] + partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_w",
+                                             "block_k", "interpret"))
+def ell_spmm(data: jax.Array, cols: jax.Array, x: jax.Array, *,
+             block_rows: int = 128, block_w: int = 128, block_k: int = 128,
+             interpret: bool = True) -> jax.Array:
+    """Y = A @ X, A in ELL-Row, X (n_cols, k) -> Y (n_rows, k)."""
+    n_rows, width = data.shape
+    n_cols, k = x.shape
+    assert n_rows % block_rows == 0 and width % block_w == 0 \
+        and k % block_k == 0, (data.shape, x.shape)
+    grid = (n_rows // block_rows, k // block_k, width // block_w)
+    out_dtype = jnp.result_type(data.dtype, x.dtype)
+    y32 = pl.pallas_call(
+        _ell_spmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, block_w), lambda i, kk, j: (i, j)),
+            pl.BlockSpec((block_rows, block_w), lambda i, kk, j: (i, j)),
+            pl.BlockSpec((n_cols, block_k), lambda i, kk, j: (0, kk)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, block_k),
+                               lambda i, kk, j: (i, kk)),
+        out_shape=jax.ShapeDtypeStruct((n_rows, k), jnp.float32),
+        interpret=interpret,
+    )(data, cols, x)
+    return y32.astype(out_dtype)

@@ -1,0 +1,169 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Responsibilities:
+  * pad raw arrays to TPU block alignment (val=0/col=0 padding — the
+    paper's own ELL zero-fill convention, so padding never changes results);
+  * accept the ``repro.core.formats`` pytree classes;
+  * provide custom VJPs so the kernels are trainable (y = A@x  =>
+    dx = A^T dy via a COO scatter; dA = dy_r * x_c at the stored positions);
+  * auto-select interpret mode off-TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import COO, CSR, ELL, BucketedELL
+from . import coo_spmv as _coo
+from . import ell_spmv as _ell
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret(flag: Optional[bool]) -> bool:
+    return (not _on_tpu()) if flag is None else flag
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
+    size = x.shape[axis]
+    target = ((size + mult - 1) // mult) * mult
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def _block_sizes(n_rows: int, width: int) -> Tuple[int, int]:
+    """Pick aligned block sizes that keep the working set well inside VMEM
+    (default tiles: 256x128 f32 = 128 KiB/operand)."""
+    br = min(256, max(8, 8 * ((n_rows + 7) // 8)))
+    bw = 128 if width > 8 else 8
+    return br, bw
+
+
+# ---------------------------------------------------------------------------
+# raw-array entry points (padding + alignment)
+# ---------------------------------------------------------------------------
+def ell_spmv_raw(data: jax.Array, cols: jax.Array, x: jax.Array,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    n_rows, width = data.shape
+    br, bw = _block_sizes(n_rows, width)
+    data = _pad_to(_pad_to(data, 0, br), 1, bw)
+    cols = _pad_to(_pad_to(cols, 0, br), 1, bw)
+    y = _ell.ell_spmv(data, cols, x, block_rows=br, block_w=bw,
+                      interpret=_interpret(interpret))
+    return y[:n_rows]
+
+
+def ell_spmm_raw(data: jax.Array, cols: jax.Array, x: jax.Array,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    n_rows, width = data.shape
+    k = x.shape[1]
+    br = min(128, max(8, 8 * ((n_rows + 7) // 8)))
+    bw = 128 if width > 8 else 8
+    bk = min(128, max(8, 8 * ((k + 7) // 8)))
+    data = _pad_to(_pad_to(data, 0, br), 1, bw)
+    cols = _pad_to(_pad_to(cols, 0, br), 1, bw)
+    xp = _pad_to(x, 1, bk)
+    y = _ell.ell_spmm(data, cols, xp, block_rows=br, block_w=bw, block_k=bk,
+                      interpret=_interpret(interpret))
+    return y[:n_rows, :k]
+
+
+def coo_spmv_raw(data: jax.Array, rows: jax.Array, cols: jax.Array,
+                 x: jax.Array, n_rows: int,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    bn = min(4096, max(8, 8 * ((data.shape[0] + 7) // 8)))
+    data = _pad_to(data, 0, bn)
+    rows = _pad_to(rows, 0, bn)
+    cols = _pad_to(cols, 0, bn)
+    return _coo.coo_spmv(data, rows, cols, x, n_rows=n_rows, block_nnz=bn,
+                         interpret=_interpret(interpret))
+
+
+# ---------------------------------------------------------------------------
+# differentiable ELL SpMV (core op used inside models)
+# ---------------------------------------------------------------------------
+@jax.custom_vjp
+def ell_spmv_ad(data: jax.Array, cols: jax.Array, x: jax.Array) -> jax.Array:
+    return ell_spmv_raw(data, cols, x)
+
+
+def _ell_fwd(data, cols, x):
+    return ell_spmv_ad(data, cols, x), (data, cols, x)
+
+
+def _ell_bwd(res, dy):
+    data, cols, x = res
+    # dx[c] = sum_{r,k: cols[r,k]=c} data[r,k] * dy[r]   (A^T dy, COO scatter)
+    dx = jnp.zeros_like(x).at[cols.reshape(-1)].add(
+        (data * dy[:, None]).reshape(-1).astype(x.dtype))
+    # dA[r,k] = dy[r] * x[cols[r,k]]
+    ddata = (dy[:, None] * x[cols]).astype(data.dtype)
+    return ddata, None, dx
+
+
+ell_spmv_ad.defvjp(_ell_fwd, _ell_bwd)
+
+
+# ---------------------------------------------------------------------------
+# format-level entry points (what the auto-tuner plugs in)
+# ---------------------------------------------------------------------------
+def spmv_ell(m: ELL, x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
+    data, cols = jnp.asarray(m.data), jnp.asarray(m.cols)
+    if m.order == "col":
+        data, cols = data.T, cols.T
+    return ell_spmv_raw(data, cols, x, interpret)
+
+
+def spmv_coo(m: COO, x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
+    return coo_spmv_raw(jnp.asarray(m.data), jnp.asarray(m.rows),
+                        jnp.asarray(m.cols), x, m.n_rows, interpret)
+
+
+def spmv_csr(m: CSR, x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
+    """CSR via the jit-able IRP->IROW expansion + the COO kernel.
+
+    Pure CSR's per-row segmented reduction has no efficient TPU mapping
+    (DESIGN.md §2) — the row expansion is the TPU-idiomatic equivalent."""
+    ip = jnp.asarray(m.indptr)
+    k = jnp.arange(m.nnz_pad, dtype=ip.dtype)
+    rows = jnp.clip(jnp.searchsorted(ip, k, side="right") - 1, 0, m.n_rows - 1)
+    rows = jnp.where(k < m.nnz, rows, 0).astype(jnp.int32)
+    data = jnp.where(k < m.nnz, jnp.asarray(m.data), 0)
+    return coo_spmv_raw(data, rows, jnp.asarray(m.cols), x, m.n_rows,
+                        interpret)
+
+
+def spmv_sell(m: BucketedELL, x: jax.Array,
+              interpret: Optional[bool] = None) -> jax.Array:
+    perm = jnp.asarray(m.perm)
+    y = None
+    for off, b in zip(m.row_offsets, m.buckets):
+        yb = ell_spmv_raw(jnp.asarray(b.data), jnp.asarray(b.cols), x,
+                          interpret)
+        if y is None:
+            y = jnp.zeros((m.n_rows,), yb.dtype)
+        y = y.at[perm[off:off + b.n_rows]].set(yb)
+    return y
+
+
+KERNEL_SPMV_IMPLS = {
+    "csr": spmv_csr,
+    "coo_row": spmv_coo,
+    "coo_col": spmv_coo,
+    "ell_row": spmv_ell,
+    "ell_col": spmv_ell,
+    "sell": spmv_sell,
+}
+
+__all__ = ["ell_spmv_raw", "ell_spmm_raw", "coo_spmv_raw", "ell_spmv_ad",
+           "spmv_ell", "spmv_coo", "spmv_csr", "spmv_sell",
+           "KERNEL_SPMV_IMPLS"]

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Pallas kernels — identical math, no tiling.
+
+Accumulation is f32 with a final cast to the input result type, matching
+the kernels (standard MXU/VPU practice for bf16 inputs).  These operate on
+raw arrays (not the pytree format classes) so kernel tests can sweep
+shapes/dtypes directly; ``repro.core.spmv`` provides the format-level
+references."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ell_spmv_ref(data: jax.Array, cols: jax.Array, x: jax.Array) -> jax.Array:
+    out_dtype = jnp.result_type(data.dtype, x.dtype)
+    y32 = (data.astype(jnp.float32) * x.astype(jnp.float32)[cols]).sum(axis=1)
+    return y32.astype(out_dtype)
+
+
+def ell_spmm_ref(data: jax.Array, cols: jax.Array, x: jax.Array) -> jax.Array:
+    out_dtype = jnp.result_type(data.dtype, x.dtype)
+    y32 = jnp.einsum("rw,rwk->rk", data.astype(jnp.float32),
+                     x.astype(jnp.float32)[cols])
+    return y32.astype(out_dtype)
+
+
+def coo_spmv_ref(data: jax.Array, rows: jax.Array, cols: jax.Array,
+                 x: jax.Array, n_rows: int) -> jax.Array:
+    out_dtype = jnp.result_type(data.dtype, x.dtype)
+    contrib = data.astype(jnp.float32) * x.astype(jnp.float32)[cols]
+    y32 = jnp.zeros((n_rows,), jnp.float32).at[rows].add(contrib)
+    return y32.astype(out_dtype)
+
+
+def sell_spmv_ref(perm: jax.Array, bucket_arrays, row_offsets, n_rows: int,
+                  x: jax.Array) -> jax.Array:
+    """bucket_arrays: sequence of (data, cols) pairs."""
+    y = None
+    for (data, cols), off in zip(bucket_arrays, row_offsets):
+        yb = ell_spmv_ref(data, cols, x)
+        if y is None:
+            y = jnp.zeros((n_rows,), yb.dtype)
+        y = y.at[perm[off:off + data.shape[0]]].set(yb)
+    return y
+
+
+def decode_attention_int8_ref(q, k_q, k_s, v_q, v_s, key_pos, q_pos,
+                              window=None):
+    """Oracle for the fused int8-KV decode kernel: dequantize, then the
+    masked max/exp/sum attention (mirrors models.attention math)."""
+    kf = k_q.astype(jnp.float32) * k_s.astype(jnp.float32)[..., None]
+    vf = v_q.astype(jnp.float32) * v_s.astype(jnp.float32)[..., None]
+    Dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, jnp.float32))
+    s = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32) * scale, kf)
+    valid = (key_pos >= 0) & (key_pos <= q_pos[:, None])
+    if window is not None:
+        valid &= key_pos > (q_pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", p / jnp.maximum(l, 1e-30), vf)
+    return out.astype(q.dtype)

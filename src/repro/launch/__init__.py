@@ -1,0 +1,3 @@
+# NOTE: repro.launch.dryrun sets XLA_FLAGS at import time; import it only
+# as a __main__ entry point.  The other modules are safe to import.
+from .mesh import make_production_mesh, make_mesh

@@ -1,0 +1,245 @@
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh)
+cell on placeholder devices; record memory/cost analysis + roofline terms.
+
+MUST be the very first two lines — jax locks the device count on first
+init, and the production meshes need 512 host-platform devices:"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, get_config        # noqa: E402
+from repro.launch.analytic import analytic_costs              # noqa: E402
+from repro.launch.mesh import (data_axis_size,                # noqa: E402
+                               make_production_mesh, model_axis_size)
+from repro.launch.roofline import (HBM_BW, ICI_BW,            # noqa: E402
+                                   PEAK_FLOPS_BF16, from_compiled)
+from repro.launch.steps import jitted_step_for_cell           # noqa: E402
+from repro.models.model import n_active_params                # noqa: E402
+
+HBM_PER_CHIP = 16e9   # v5e
+
+
+def unrolled_cfg(cfg):
+    """Expand the layer pattern to full depth: the layer scan becomes a
+    single-iteration loop, so ``cost_analysis`` (which counts each while
+    body once) reports exact per-step costs for programs with no inner
+    time loops — i.e. every decode cell (see launch/analytic.py)."""
+    full = (tuple(cfg.layer_pattern) * cfg.scan_reps +
+            tuple(cfg.remainder_pattern))
+    return cfg.replace(layer_pattern=full, n_layers=len(full))
+
+
+def skip_reason(cfg, shape) -> str:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("SKIP(design): pure full-attention arch defines no "
+                "sub-quadratic mechanism for 524k context (DESIGN.md §5)")
+    return ""
+
+
+def model_flops_for(cfg, shape) -> float:
+    n_act = n_active_params(cfg)
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0   # fwd-only = 2*N*D
+    return mult * n_act * tokens
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             donate: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch).resolve_for_tp(model_axis_size(mesh))
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "status": "ok"}
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec.update(status="skip", reason=reason)
+        _save(rec, out_dir)
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: {reason}")
+        return rec
+
+    t0 = time.time()
+    try:
+        jfn, args = jitted_step_for_cell(cfg, shape, mesh, donate=donate)
+        with mesh:
+            lowered = jfn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            hlo_text = compiled.as_text()
+        rl = from_compiled(compiled, arch=arch, shape=shape_name,
+                           mesh_name=mesh_name, chips=chips,
+                           model_flops=model_flops_for(cfg, shape),
+                           hlo_text=hlo_text)
+        peak = (getattr(mem, "temp_size_in_bytes", 0) +
+                getattr(mem, "argument_size_in_bytes", 0) +
+                getattr(mem, "output_size_in_bytes", 0) -
+                getattr(mem, "alias_size_in_bytes", 0))
+        rec.update(
+            roofline=rl.to_dict(),
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", 0),
+                "peak_bytes": peak,
+                "fits_16gb": bool(peak < HBM_PER_CHIP),
+            },
+            timings={"lower_s": t_lower, "compile_s": t_compile},
+        )
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK "
+              f"peak={peak/1e9:.2f}GB "
+              f"compute={rl.t_compute*1e3:.2f}ms "
+              f"memory={rl.t_memory*1e3:.2f}ms "
+              f"collective={rl.t_collective*1e3:.2f}ms "
+              f"bottleneck={rl.bottleneck} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    except Exception as e:  # a failure here is a bug in the system
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: "
+              f"FAILED {type(e).__name__}: {e}")
+    _save(rec, out_dir)
+    return rec
+
+
+def _save(rec: dict, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(
+        out_dir, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def analyze_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+                 unroll_hlo: bool = False) -> None:
+    """Augment an existing cell record with (a) analytic trip-count-aware
+    roofline terms and (b), optionally, an exact unrolled-HLO compile
+    (decode cells: no inner loops remain, so the HLO numbers are exact)."""
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+    with open(path) as f:
+        rec = json.load(f)
+    if rec.get("status") != "ok":
+        return
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch).resolve_for_tp(model_axis_size(mesh))
+    cfg_a = cfg.replace(kv_quant=True) if shape.kind != "train" else cfg
+    ac = analytic_costs(cfg_a, shape, chips, data_axis_size(mesh),
+                        model_axis_size(mesh))
+    t_c = ac.flops / PEAK_FLOPS_BF16
+    t_m = ac.bytes / HBM_BW
+    t_l = ac.collective_bytes / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_l}
+    rec["analytic"] = {
+        "flops_dev": ac.flops, "bytes_dev": ac.bytes,
+        "collective_bytes_dev": ac.collective_bytes,
+        "t_compute": t_c, "t_memory": t_m, "t_collective": t_l,
+        "bottleneck": max(terms, key=terms.get),
+        "model_flops_global": ac.detail["model_flops_global"],
+        "useful_ratio": ac.detail["model_flops_global"] /
+        (chips * ac.flops) if ac.flops else 0.0,
+        "detail": ac.detail,
+    }
+    if unroll_hlo:
+        try:
+            ucfg = unrolled_cfg(cfg)
+            jfn, a = jitted_step_for_cell(ucfg, shape, mesh, donate=False,
+                                          microbatches=1)
+            with mesh:
+                compiled = jfn.lower(*a).compile()
+                hlo_text = compiled.as_text()
+            rl = from_compiled(compiled, arch=arch, shape=shape_name,
+                               mesh_name=mesh_name, chips=chips,
+                               model_flops=model_flops_for(cfg, shape),
+                               hlo_text=hlo_text)
+            rec["hlo_unrolled"] = rl.to_dict()
+        except Exception as e:  # analysis-only; keep the base record
+            rec["hlo_unrolled"] = {"error": f"{type(e).__name__}: {e}"}
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    a_bn = rec["analytic"]["bottleneck"]
+    print(f"[analysis] {arch} x {shape_name} x {mesh_name}: "
+          f"analytic compute={t_c*1e3:.2f}ms memory={t_m*1e3:.2f}ms "
+          f"collective={t_l*1e3:.2f}ms bottleneck={a_bn}" +
+          (" (+unrolled HLO)" if unroll_hlo and
+           "error" not in rec.get("hlo_unrolled", {}) else ""))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all' (see repro.configs.ARCH_IDS)")
+    ap.add_argument("--shape", default="all",
+                    help="shape cell or 'all' (train_4k, prefill_32k, "
+                         "decode_32k, long_500k)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--analysis", action="store_true",
+                    help="augment existing records with analytic terms "
+                         "(+ exact unrolled HLO for decode cells)")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else (args.arch,)
+    shapes = tuple(SHAPES) if args.shape == "all" else (args.shape,)
+    meshes = {"single": (False,), "multi": (True,),
+              "both": (False, True)}[args.mesh]
+
+    if args.analysis:
+        for arch in archs:
+            for shape in shapes:
+                for mp in meshes:
+                    mesh_name = "2x16x16" if mp else "16x16"
+                    p = os.path.join(args.out,
+                                     f"{arch}__{shape}__{mesh_name}.json")
+                    if not os.path.exists(p):
+                        continue
+                    unroll = SHAPES[shape].kind == "decode" and not mp
+                    analyze_cell(arch, shape, mp, args.out,
+                                 unroll_hlo=unroll)
+        return
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                path = os.path.join(args.out,
+                                    f"{arch}__{shape}__{mesh_name}.json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        prev = json.load(f)
+                    if prev.get("status") in ("ok", "skip"):
+                        print(f"[dryrun] {arch} x {shape} x {mesh_name}: "
+                              "cached")
+                        results.append(prev)
+                        continue
+                results.append(run_cell(arch, shape, mp, args.out))
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skip(design), {n_err} error")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production meshes.  Defined as FUNCTIONS so importing this module never
+touches jax device state (required for the 512-placeholder-device dry-run:
+jax locks the device count on first init)."""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2x16x16 = 512 chips across two pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests, elastic-scaling checks)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=_auto(len(axes)))
+
+
+def data_axis_size(mesh) -> int:
+    shape = dict(mesh.shape)
+    return shape.get("pod", 1) * shape.get("data", 1)
+
+
+def model_axis_size(mesh) -> int:
+    return dict(mesh.shape).get("model", 1)
+
+
+__all__ = ["make_production_mesh", "make_mesh", "data_axis_size",
+           "model_axis_size"]

@@ -1,0 +1,149 @@
+"""§Perf hillclimbing harness: compile one (arch x shape) cell under a
+named optimization variant and record the roofline evidence.
+
+Measurements per variant (all from compiled artifacts on the 16x16 mesh):
+  * scanned-HLO: flops/bytes/collective bytes of the production program
+    (while bodies counted once — used as *per-body* deltas between
+    variants, same-denominator comparisons);
+  * unrolled-HLO (decode cells): exact per-step numbers (no inner loops);
+  * analytic: trip-count-aware closed-form terms (launch/analytic.py);
+  * memory_analysis peak.
+
+    PYTHONPATH=src python -m repro.launch.perf --cell dbrx-132b:decode_32k \
+        --variant base
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs import SHAPES, get_config                  # noqa: E402
+from repro.launch.analytic import analytic_costs              # noqa: E402
+from repro.launch.dryrun import model_flops_for, unrolled_cfg  # noqa: E402
+from repro.launch.mesh import (data_axis_size,                # noqa: E402
+                               make_production_mesh, model_axis_size)
+from repro.launch.roofline import (HBM_BW, ICI_BW,            # noqa: E402
+                                   PEAK_FLOPS_BF16, from_compiled)
+from repro.launch.steps import jitted_step_for_cell           # noqa: E402
+
+
+# variant name -> (cfg transform, step kwargs)
+VARIANTS = {
+    "base": (lambda c: c, {}),
+    # dbrx decode iterations
+    "kv_bf16": (lambda c: c, {"kv_quant": False}),      # pre-int8 baseline
+    "kv_int8": (lambda c: c, {"kv_quant": True}),
+    "serve_ws": (lambda c: c, {"kv_quant": True,
+                               "serve_weight_stationary": True}),
+    "serve_ws_bf16": (lambda c: c, {"kv_quant": False,
+                                    "serve_weight_stationary": True}),
+    "moe_c1": (lambda c: c, {"kv_quant": True}),   # after capacity-floor fix
+    "moe_csr": (lambda c: c.replace(moe_dispatch="csr"),
+                {"kv_quant": True}),
+    "moe_c1_ws": (lambda c: c, {"kv_quant": True,
+                                "serve_weight_stationary": True}),
+    # gemma3 train iterations
+    "embed_tp": (lambda c: c.replace(embed_tp_lookup=True), {}),
+    # xlstm train iterations
+    "local_rec": (lambda c: c.replace(xlstm_shard_recurrent=False), {}),
+    "zero1": (lambda c: c, {"zero1": True}),
+    "local_rec_zero1": (lambda c: c.replace(xlstm_shard_recurrent=False),
+                        {"zero1": True}),
+    "embed_tp_zero1": (lambda c: c.replace(embed_tp_lookup=True),
+                       {"zero1": True}),
+    "mixed": (lambda c: c, {"mixed_precision": True}),
+    "mixed_embed_tp": (lambda c: c.replace(embed_tp_lookup=True),
+                       {"mixed_precision": True}),
+    "mixed_zero1": (lambda c: c, {"mixed_precision": True, "zero1": True}),
+    "flash4k": (lambda c: c.replace(flash_kv_chunk=4096), {}),
+}
+
+
+def run_variant(arch: str, shape_name: str, variant: str,
+                out_dir: str = "experiments/perf",
+                unroll: bool = None) -> dict:
+    mesh = make_production_mesh(multi_pod=False)
+    shape = SHAPES[shape_name]
+    cfg_fn, kwargs = VARIANTS[variant]
+    cfg = cfg_fn(get_config(arch).resolve_for_tp(model_axis_size(mesh)))
+    if unroll is None:
+        unroll = shape.kind == "decode"
+
+    rec = {"arch": arch, "shape": shape_name, "variant": variant}
+    t0 = time.time()
+    jfn, args = jitted_step_for_cell(cfg, shape, mesh, **kwargs)
+    with mesh:
+        compiled = jfn.lower(*args).compile()
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+    rl = from_compiled(compiled, arch=arch, shape=shape_name,
+                       mesh_name="16x16", chips=256,
+                       model_flops=model_flops_for(cfg, shape),
+                       hlo_text=hlo)
+    peak = (getattr(mem, "temp_size_in_bytes", 0) +
+            getattr(mem, "argument_size_in_bytes", 0) +
+            getattr(mem, "output_size_in_bytes", 0) -
+            getattr(mem, "alias_size_in_bytes", 0))
+    rec["scanned"] = rl.to_dict()
+    rec["peak_gb"] = peak / 1e9
+
+    if unroll:
+        ucfg = unrolled_cfg(cfg)
+        ujfn, uargs = jitted_step_for_cell(ucfg, shape, mesh, donate=False,
+                                           microbatches=1, **kwargs)
+        with mesh:
+            ucompiled = ujfn.lower(*uargs).compile()
+            uhlo = ucompiled.as_text()
+        url = from_compiled(ucompiled, arch=arch, shape=shape_name,
+                            mesh_name="16x16", chips=256,
+                            model_flops=model_flops_for(cfg, shape),
+                            hlo_text=uhlo)
+        rec["unrolled"] = url.to_dict()
+
+    cfg_serve = (cfg if shape.kind == "train"
+                 else cfg.replace(kv_quant=kwargs.get("kv_quant", True)))
+    ac = analytic_costs(cfg_serve, shape, 256, data_axis_size(mesh),
+                        model_axis_size(mesh))
+    rec["analytic"] = {
+        "t_compute_ms": ac.flops / PEAK_FLOPS_BF16 * 1e3,
+        "t_memory_ms": ac.bytes / HBM_BW * 1e3,
+        "t_collective_ms": ac.collective_bytes / ICI_BW * 1e3,
+    }
+    rec["compile_s"] = time.time() - t0
+
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{variant}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+    src = rec.get("unrolled", rec["scanned"])
+    print(f"[perf] {arch} x {shape_name} [{variant}]: "
+          f"flops/dev={src['hlo_flops']:.3g} "
+          f"bytes/dev={src['hlo_bytes']:.3g} "
+          f"coll/dev={src['collective_bytes']:.3g} "
+          f"peak={rec['peak_gb']:.2f}GB "
+          f"({'unrolled' if 'unrolled' in rec else 'scanned'} HLO, "
+          f"{rec['compile_s']:.0f}s)")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variant", required=True,
+                    help=f"one of {sorted(VARIANTS)} or comma list")
+    ap.add_argument("--out", default="experiments/perf")
+    ap.add_argument("--unroll", action="store_true", default=None)
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    for v in args.variant.split(","):
+        run_variant(arch, shape, v, args.out, unroll=args.unroll)
+
+
+if __name__ == "__main__":
+    main()

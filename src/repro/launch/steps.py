@@ -1,0 +1,328 @@
+"""Step builders (train / prefill / serve), dry-run input specs, and
+sharding assignment for every argument tree (DESIGN.md §6).
+
+All shardings are derived from the logical-axis rules; the batch axis
+mapping is shape-aware (B=1 long-context decode falls back to sequence
+sharding of the KV cache = context parallelism)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.optim import adamw
+from repro.sharding.rules import (RULES_1POD, RULES_SERVE, RULES_ZERO1,
+                                  ShardingRules, axes_tree,
+                                  logical_to_sharding, rules_for_mesh,
+                                  use_rules)
+from .mesh import data_axis_size, model_axis_size
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one step of the given shape cell.
+
+    Train/prefill: the full sequence; frontend archs split the sequence
+    into (frontend embeddings, text tokens) so total length == seq_len.
+    Decode: a single new token (the KV cache is a separate argument)."""
+    B = shape.global_batch
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    F = cfg.frontend_len if cfg.frontend else 0
+    S_text = shape.seq_len - F
+    out = {"tokens": jax.ShapeDtypeStruct((B, S_text), jnp.int32),
+           "labels": jax.ShapeDtypeStruct((B, S_text), jnp.int32)}
+    if cfg.frontend:
+        out["frontend_embeds"] = jax.ShapeDtypeStruct((B, F, cfg.d_model),
+                                                      dtype)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> Any:
+    """ShapeDtypeStruct tree for the decode caches at this cell's length."""
+    return jax.eval_shape(
+        lambda: M.init_caches(cfg, shape.global_batch, shape.seq_len, dtype))
+
+
+def param_specs(cfg: ModelConfig, dtype=jnp.float32) -> Any:
+    from repro.sharding.rules import eval_shape_params
+    return eval_shape_params(M.model_spec(cfg), dtype)
+
+
+# ---------------------------------------------------------------------------
+# sharding assignment
+# ---------------------------------------------------------------------------
+def batch_axes_for(B: int, mesh) -> Optional[Tuple[str, ...]]:
+    cands = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    while cands:
+        size = int(np.prod([dict(mesh.shape)[a] for a in cands]))
+        if B % size == 0:
+            return cands
+        cands = cands[:-1]
+    return None
+
+
+def params_sharding(cfg: ModelConfig, mesh,
+                    rules: ShardingRules = RULES_1POD) -> Any:
+    return logical_to_sharding(M.model_spec(cfg), mesh, rules)
+
+
+def opt_sharding(cfg: ModelConfig, mesh,
+                 rules: ShardingRules = RULES_1POD) -> adamw.AdamWState:
+    ps = params_sharding(cfg, mesh, rules)
+    return adamw.AdamWState(step=NamedSharding(mesh, P()), m=ps, v=ps)
+
+
+def batch_sharding(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Any:
+    bax = batch_axes_for(shape.global_batch, mesh)
+    specs = input_specs(cfg, shape)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, P(bax, *([None] * (len(s.shape) - 1)))),
+        specs)
+
+
+def cache_sharding(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Any:
+    """Heuristic per-leaf placement:
+      * batch dim -> (pod, data) when divisible;
+      * attn K/V: kv_heads -> model; if batch unshardable, sequence -> (pod,
+        data) (context parallelism for long_500k);
+      * SSM/xLSTM states: heads (or the widest inner dim) -> model."""
+    B = shape.global_batch
+    bax = batch_axes_for(B, mesh)
+    tp = model_axis_size(mesh)
+    dp = data_axis_size(mesh)
+    seq_ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    specs = cache_specs(cfg, shape)
+
+    def leaf(path, s):
+        names = [getattr(p, "key", "") for p in path]
+        stacked = "scan" in names
+        lead = (None,) if stacked else ()
+        shp = s.shape[1:] if stacked else s.shape
+        name = names[-1]
+        ent: list = [None] * len(shp)
+        ent[0] = bax  # batch dim (None if not shardable)
+        if name in ("k", "v", "k_s", "v_s"):      # (B, S, KV[, hd])
+            if shp[2] % tp == 0:
+                ent[2] = "model"
+            if bax is None and seq_ax and shp[1] % dp == 0:
+                ent[1] = seq_ax                   # context parallelism
+        elif name == "h" and len(shp) == 4:       # mamba (B, H, N, hd)
+            if shp[1] % tp == 0:
+                ent[1] = "model"
+        elif name == "conv":                      # (B, K, C)
+            if shp[2] % tp == 0:
+                ent[2] = "model"
+        elif name == "C" and len(shp) == 4:       # mlstm (B, H, dk, dv)
+            if shp[1] % tp == 0:
+                ent[1] = "model"
+            elif shp[3] % tp == 0:
+                ent[3] = "model"
+        elif len(shp) >= 3 and shp[-1] % tp == 0 and name in ("c", "n",
+                                                              "m", "h"):
+            if shp[1] % tp == 0:
+                ent[1] = "model"
+        return NamedSharding(mesh, P(*lead, *ent))
+
+    return jax.tree_util.tree_map_with_path(leaf, specs)
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    microbatches: int = 1, mixed_precision: bool = False):
+    """One optimizer step; ``microbatches`` > 1 scans gradient accumulation
+    over batch slices (bounds activation transients — the knob that fits
+    train_4k in HBM for the 12B+ architectures).  ``mixed_precision``:
+    bf16 working params + f32 master in the optimizer state (§Perf: halves
+    FSDP all-gather bytes)."""
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: M.loss_fn(p, batch, cfg))(params)
+        else:
+            mb = jax.tree.map(
+                lambda a: a.reshape((microbatches, a.shape[0] // microbatches)
+                                    + a.shape[1:]), batch)
+            from repro.models.model import model_spec
+            from repro.sharding.rules import axes_tree
+            from repro.sharding.rules import with_logical_constraint as wlc
+            g_axes = axes_tree(model_spec(cfg))
+
+            def acc_fn(carry, mbatch):
+                loss_sum, gacc = carry
+                l, g = jax.value_and_grad(
+                    lambda p: M.loss_fn(p, mbatch, cfg))(params)
+                # pin per-microbatch grads to the parameter sharding so the
+                # cross-data reduction lowers as reduce-scatter, not a
+                # full-size all-reduce (§Perf: 2x gradient traffic)
+                g = jax.tree.map(lambda gg, ax: wlc(gg, ax), g, g_axes)
+                return (loss_sum + l,
+                        jax.tree.map(jnp.add, gacc, g)), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, gsum), _ = jax.lax.scan(
+                acc_fn, (jnp.zeros((), jnp.float32), zeros), mb)
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+        if mixed_precision:
+            new_params, new_state, gnorm = adamw.update_mixed(
+                opt_cfg, grads, opt_state)
+        else:
+            new_params, new_state, gnorm = adamw.update(opt_cfg, grads,
+                                                        opt_state, params)
+        return new_params, new_state, {"loss": loss, "grad_norm": gnorm}
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch, caches):
+        logits, caches = M.prefill(params, batch, caches, cfg)
+        # serving prefill emits the first generated token
+        next_tok = jnp.argmax(logits[:, -1:, :], axis=-1)
+        return next_tok, caches
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, tokens, caches, cache_len):
+        logits, caches = M.decode_step(params, tokens, caches, cache_len, cfg)
+        next_tok = jnp.argmax(logits[:, -1:, :], axis=-1)
+        return next_tok, caches
+    return serve_step
+
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Pick gradient-accumulation depth so train transients fit 16 GB HBM:
+    scale with model width x depth (activation bytes per token-layer)."""
+    if shape.kind != "train":
+        return 1
+    cost = cfg.d_model * cfg.n_layers * shape.seq_len * shape.global_batch
+    # empirical anchor: qwen3 (2048 x 28, B=256, S=4k) fits at M=1 (~9 GB)
+    anchor = 2048 * 28 * 4096 * 256
+    m = 1
+    while cost > anchor * m and m < 64:
+        m *= 2
+    if cfg.n_experts:
+        # MoE params+optimizer already eat ~8 GB/chip at 132B — halve the
+        # activation transients once more (measured: dbrx 18.0 -> fits)
+        m *= 2
+    while shape.global_batch % m:
+        m //= 2
+    return max(m, 1)
+
+
+def _with_rules(fn, rules: Optional[ShardingRules]):
+    if rules is None:
+        return fn
+
+    def wrapped(*a, **kw):
+        with use_rules(rules):
+            return fn(*a, **kw)
+    return wrapped
+
+
+def jitted_step_for_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                         opt_cfg: Optional[adamw.AdamWConfig] = None,
+                         rules: Optional[ShardingRules] = None,
+                         donate: bool = True,
+                         microbatches: Optional[int] = None,
+                         serve_weight_stationary: Optional[bool] = None,
+                         zero1: bool = False,
+                         kv_quant: Optional[bool] = None,
+                         mixed_precision: bool = False):
+    """Build (jitted_fn, abstract_args) for one (arch x shape) cell.
+
+    train  -> train_step(params_f32, opt_state, batch)
+    prefill-> prefill_step(params_bf16, batch, caches)
+    decode -> serve_step(params_bf16, tokens, caches, cache_len)
+
+    §Perf variants: ``serve_weight_stationary`` traces serving under
+    RULES_SERVE (d-sharded residual stream, no FSDP weight gathers);
+    ``zero1`` replicates parameters and shards only optimizer moments;
+    ``kv_quant`` overrides the serving int8-KV default."""
+    rules = rules or rules_for_mesh(mesh)
+    act_rules = None
+    if shape.kind != "train":
+        # production serving config: int8 KV cache (halves cache bytes)
+        cfg = cfg.replace(kv_quant=True if kv_quant is None else kv_quant)
+        # weight-stationary decode is the default (§Perf: 65x collective
+        # reduction on dbrx decode_32k); prefill keeps batch-sharded
+        # activations (they are large)
+        if serve_weight_stationary is None:
+            serve_weight_stationary = (shape.kind == "decode")
+        if serve_weight_stationary:
+            act_rules = RULES_SERVE
+    param_rules = RULES_ZERO1 if zero1 else rules
+    ps = params_sharding(cfg, mesh, param_rules)
+    bsh = batch_sharding(cfg, shape, mesh)
+    binp = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or adamw.AdamWConfig()
+        mb = (microbatches if microbatches is not None
+              else default_microbatches(cfg, shape))
+        fn = _with_rules(make_train_step(cfg, opt_cfg, microbatches=mb,
+                                         mixed_precision=mixed_precision),
+                         act_rules)
+        # ZeRO-1: moments stay data-sharded even with replicated params
+        osh_base = params_sharding(cfg, mesh, rules)
+        if mixed_precision:
+            osh = adamw.AdamWMixedState(step=NamedSharding(mesh, P()),
+                                        m=osh_base, v=osh_base,
+                                        master=osh_base)
+            pspec32 = param_specs(cfg, jnp.float32)
+            args = (param_specs(cfg, jnp.bfloat16),
+                    jax.eval_shape(adamw.init_mixed, pspec32), binp)
+        else:
+            osh = adamw.AdamWState(step=NamedSharding(mesh, P()),
+                                   m=osh_base, v=osh_base)
+            pspec32 = param_specs(cfg, jnp.float32)
+            args = (pspec32, jax.eval_shape(adamw.init, pspec32), binp)
+        jfn = jax.jit(fn,
+                      in_shardings=(ps, osh, bsh),
+                      out_shardings=(ps, osh, NamedSharding(mesh, P())),
+                      donate_argnums=(0, 1) if donate else ())
+        return jfn, args
+
+    csh = cache_sharding(cfg, shape, mesh)
+    cargs = cache_specs(cfg, shape)
+    bax = batch_axes_for(shape.global_batch, mesh)
+    tok_out = NamedSharding(mesh, P(bax, None))
+
+    if shape.kind == "prefill":
+        fn = _with_rules(make_prefill_step(cfg), act_rules)
+        jfn = jax.jit(fn,
+                      in_shardings=(ps, bsh, csh),
+                      out_shardings=(tok_out, csh),
+                      donate_argnums=(2,) if donate else ())
+        args = (param_specs(cfg, jnp.bfloat16), binp, cargs)
+        return jfn, args
+
+    fn = _with_rules(make_serve_step(cfg), act_rules)
+    jfn = jax.jit(fn,
+                  in_shardings=(ps, bsh["tokens"], csh,
+                                NamedSharding(mesh, P())),
+                  out_shardings=(tok_out, csh),
+                  donate_argnums=(2,) if donate else ())
+    args = (param_specs(cfg, jnp.bfloat16), binp["tokens"], cargs,
+            jax.ShapeDtypeStruct((), jnp.int32))
+    return jfn, args
+
+
+__all__ = ["input_specs", "cache_specs", "param_specs", "batch_axes_for",
+           "params_sharding", "opt_sharding", "batch_sharding",
+           "cache_sharding", "make_train_step", "make_prefill_step",
+           "make_serve_step", "jitted_step_for_cell"]

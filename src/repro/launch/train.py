@@ -1,0 +1,71 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --scale smoke --steps 100 --mesh 1x1
+    PYTHONPATH=src python -m repro.launch.train --arch dbrx-132b \
+        --scale full --mesh 16x16 --dry-run     # lower+compile only
+
+Mesh axes: DxM (data x model) or PxDxM (pod x data x model).  Device count
+must match the mesh; for placeholder-device experiments set
+REPRO_XLA_FLAGS/XLA_FLAGS before launch (see dryrun.py, which owns the
+512-device setting)."""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--scale", choices=["smoke", "full"], default="smoke")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--mesh", default="1x1",
+                    help="DxM or PxDxM, e.g. 16x16 or 2x16x16")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="lower+compile the step and exit")
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs import get_config, smoke_config
+    from repro.configs.base import ShapeConfig
+    from repro.data import SyntheticLM, data_config_for
+    from repro.launch.mesh import make_mesh, model_axis_size
+    from repro.train import TrainConfig, Trainer, run_with_restarts
+
+    dims = tuple(int(x) for x in args.mesh.split("x"))
+    axes = {2: ("data", "model"), 3: ("pod", "data", "model")}[len(dims)]
+    mesh = make_mesh(dims, axes)
+
+    cfg = get_config(args.arch)
+    if args.scale == "smoke":
+        cfg = smoke_config(cfg)
+    cfg = cfg.resolve_for_tp(model_axis_size(mesh))
+
+    if args.dry_run:
+        from repro.launch.steps import jitted_step_for_cell
+        shape = ShapeConfig("custom", args.seq, args.batch, "train")
+        jfn, in_args = jitted_step_for_cell(
+            cfg, shape, mesh, microbatches=args.microbatches)
+        with mesh:
+            compiled = jfn.lower(*in_args).compile()
+            print(compiled.memory_analysis())
+            print({k: v for k, v in compiled.cost_analysis().items()
+                   if k in ("flops", "bytes accessed")})
+        return
+
+    data = SyntheticLM(data_config_for(cfg, args.seq, args.batch))
+    tc = TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                     microbatches=args.microbatches)
+    with mesh:
+        trainer = Trainer(cfg, data, tc)
+        state = run_with_restarts(trainer)
+    print(f"finished at step {state.step}; "
+          f"final loss {trainer.metrics[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

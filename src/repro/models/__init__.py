@@ -1,0 +1,2 @@
+from .model import (decode_step, forward, init, init_caches, loss_fn,
+                    model_spec, n_active_params, n_params, prefill)

@@ -1,0 +1,134 @@
+"""Block kinds: spec/apply/cache-init triples, composed by model.py.
+
+Residual structure:
+  attn/local[_moe]: x += Attn(LN(x)); x += MLP-or-MoE(LN(x))
+  mamba[_attn]:     x += Mamba(LN(x)); [+ the zamba2 *shared* attn+MLP block]
+  mlstm/slstm:      x += xLSTM(LN(x))   (projections live inside the block)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .attention import (attention_apply, attention_spec, init_kv_cache,
+                        kv_cache_len)
+from .layers import mlp_apply, mlp_spec, rms_norm, rms_norm_spec
+from .moe import moe_apply, moe_spec
+from .ssm import init_mamba_cache, mamba_apply, mamba_spec
+from .xlstm import (init_mlstm_cache, init_slstm_cache, mlstm_apply,
+                    mlstm_spec, slstm_apply, slstm_spec)
+
+
+def block_spec(kind: str, cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    if kind in ("attn", "local"):
+        return {"ln1": rms_norm_spec(d), "attn": attention_spec(cfg),
+                "ln2": rms_norm_spec(d), "mlp": mlp_spec(cfg)}
+    if kind in ("moe", "local_moe"):
+        return {"ln1": rms_norm_spec(d), "attn": attention_spec(cfg),
+                "ln2": rms_norm_spec(d), "moe": moe_spec(cfg)}
+    if kind in ("mamba", "mamba_attn"):
+        return {"ln": rms_norm_spec(d), "mamba": mamba_spec(cfg)}
+    if kind == "mlstm":
+        return {"ln": rms_norm_spec(d), "mlstm": mlstm_spec(cfg)}
+    if kind == "slstm":
+        return {"ln": rms_norm_spec(d), "slstm": slstm_spec(cfg)}
+    raise KeyError(kind)
+
+
+def shared_block_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    """zamba2's weight-shared attention block (one param set, many calls)."""
+    d = cfg.d_model
+    return {"ln1": rms_norm_spec(d), "attn": attention_spec(cfg),
+            "ln2": rms_norm_spec(d), "mlp": mlp_spec(cfg)}
+
+
+def init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                     dtype) -> Dict[str, Any]:
+    if kind in ("attn", "local", "moe", "local_moe"):
+        return {"attn": init_kv_cache(
+            cfg, batch, kv_cache_len(cfg, kind, max_len), dtype)}
+    if kind == "mamba":
+        return {"mamba": init_mamba_cache(cfg, batch, dtype)}
+    if kind == "mamba_attn":
+        return {"mamba": init_mamba_cache(cfg, batch, dtype),
+                "attn": init_kv_cache(cfg, batch, max_len, dtype)}
+    if kind == "mlstm":
+        return {"mlstm": init_mlstm_cache(cfg, batch, dtype)}
+    if kind == "slstm":
+        return {"slstm": init_slstm_cache(cfg, batch, dtype)}
+    raise KeyError(kind)
+
+
+def block_apply(kind: str, cfg: ModelConfig, params, x, *,
+                shared_params=None, cache=None, cache_len=None
+                ) -> Tuple[Any, Optional[Dict], Any]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Optional[Dict[str, Any]] = {} if cache is not None else None
+
+    if kind in ("attn", "local", "moe", "local_moe"):
+        window = cfg.window if kind in ("local", "local_moe") else None
+        theta = (cfg.rope_theta_global
+                 if kind == "attn" and cfg.rope_theta_global else None)
+        h, kv = attention_apply(
+            params["attn"], rms_norm(params["ln1"], x, cfg.norm_eps), cfg,
+            window=window, rope_theta=theta,
+            cache=None if cache is None else cache["attn"],
+            cache_len=cache_len)
+        x = x + h
+        if new_cache is not None:
+            new_cache["attn"] = kv
+        h2_in = rms_norm(params["ln2"], x, cfg.norm_eps)
+        if kind in ("moe", "local_moe"):
+            h2, aux = moe_apply(params["moe"], h2_in, cfg)
+        else:
+            h2 = mlp_apply(params["mlp"], h2_in, cfg)
+        x = x + h2
+        return x, new_cache, aux
+
+    if kind in ("mamba", "mamba_attn"):
+        h, mc = mamba_apply(params["mamba"],
+                            rms_norm(params["ln"], x, cfg.norm_eps), cfg,
+                            cache=None if cache is None else cache["mamba"])
+        x = x + h
+        if new_cache is not None:
+            new_cache["mamba"] = mc
+        if kind == "mamba_attn":
+            assert shared_params is not None, "zamba2 needs shared attn params"
+            h, kv = attention_apply(
+                shared_params["attn"],
+                rms_norm(shared_params["ln1"], x, cfg.norm_eps), cfg,
+                cache=None if cache is None else cache["attn"],
+                cache_len=cache_len)
+            x = x + h
+            x = x + mlp_apply(shared_params["mlp"],
+                              rms_norm(shared_params["ln2"], x, cfg.norm_eps),
+                              cfg)
+            if new_cache is not None:
+                new_cache["attn"] = kv
+        return x, new_cache, aux
+
+    if kind == "mlstm":
+        h, c = mlstm_apply(params["mlstm"],
+                           rms_norm(params["ln"], x, cfg.norm_eps), cfg,
+                           cache=None if cache is None else cache["mlstm"])
+        if new_cache is not None:
+            new_cache["mlstm"] = c
+        return x + h, new_cache, aux
+
+    if kind == "slstm":
+        h, c = slstm_apply(params["slstm"],
+                           rms_norm(params["ln"], x, cfg.norm_eps), cfg,
+                           cache=None if cache is None else cache["slstm"])
+        if new_cache is not None:
+            new_cache["slstm"] = c
+        return x + h, new_cache, aux
+
+    raise KeyError(kind)
+
+
+__all__ = ["block_spec", "shared_block_spec", "init_block_cache",
+           "block_apply"]

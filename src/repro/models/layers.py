@@ -1,0 +1,127 @@
+"""Shared NN layers: RMSNorm, RoPE, MLP, embeddings — spec + apply pairs.
+
+Every module is a (``*_spec``, ``*_apply``) pair: the spec declares shapes
+and logical axes once (single source of truth for init AND sharding), the
+apply is a pure function.  Weights live in fp32; applies cast to the
+config compute dtype (bf16 by default)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.rules import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def rms_norm_spec(d: int) -> Dict[str, ParamSpec]:
+    return {"scale": ParamSpec((d,), (None,), init="ones")}
+
+
+def rms_norm(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                   # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                   # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+def mlp_spec(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamSpec((d, ff), ("embed", "ffn")),
+        "w_up": ParamSpec((d, ff), ("embed", "ffn")),
+        "w_down": ParamSpec((ff, d), ("ffn", "embed")),
+    }
+
+
+def mlp_apply(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    ct = cfg.compute_dtype
+    h = jax.nn.silu(x @ params["w_gate"].astype(ct)) * (x @ params["w_up"].astype(ct))
+    return h @ params["w_down"].astype(ct)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / lm head
+# ---------------------------------------------------------------------------
+def padded_vocab(cfg: ModelConfig, mult: int = 128) -> int:
+    """Vocab rounded up for even sharding (jit argument shardings require
+    divisibility).  Extra rows are never indexed; extra logit columns are
+    masked to -inf in lm_head_apply, so the model function is unchanged."""
+    return ((cfg.vocab_size + mult - 1) // mult) * mult
+
+
+def embed_spec(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    # embed_tp_lookup (§Perf): shard the table over model on the d dim and
+    # keep vocab replicated -> the token gather is fully local per shard
+    # (each device gathers its d-slice for all tokens).  GSPMD otherwise
+    # falls back to "involuntary full rematerialization" of the
+    # vocab-sharded table on every lookup (observed: GB-scale all-gathers
+    # per microbatch on the 262k-vocab archs).
+    axes = (None, "embed_tp") if cfg.embed_tp_lookup else ("vocab", "embed")
+    spec = {"tok": ParamSpec((padded_vocab(cfg), cfg.d_model),
+                             axes, init="embed")}
+    if cfg.frontend is not None:
+        # stub frontend projection: precomputed patch/frame embeddings
+        # (d_frontend == d_model for the stub) -> model space
+        spec["frontend_proj"] = ParamSpec((cfg.d_model, cfg.d_model),
+                                          ("embed", "embed_act"))
+    return spec
+
+
+def embed_tokens(params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    ct = cfg.compute_dtype
+    return params["tok"].astype(ct)[tokens]
+
+
+def lm_head_spec(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": ParamSpec((cfg.d_model, padded_vocab(cfg)),
+                           ("embed", "vocab"))}
+
+
+def lm_head_apply(head_params, embed_params, x: jax.Array,
+                  cfg: ModelConfig) -> jax.Array:
+    ct = cfg.compute_dtype
+    if cfg.tie_embeddings:
+        logits = x @ embed_params["tok"].astype(ct).T
+    else:
+        logits = x @ head_params["w"].astype(ct)
+    vp = padded_vocab(cfg)
+    if vp != cfg.vocab_size:  # mask pad columns out of the softmax
+        neg = jnp.asarray(-1e30, logits.dtype)
+        logits = jnp.where(jnp.arange(vp) < cfg.vocab_size, logits, neg)
+    return logits
+
+
+__all__ = ["rms_norm_spec", "rms_norm", "rope_freqs", "apply_rope",
+           "mlp_spec", "mlp_apply", "embed_spec", "embed_tokens",
+           "lm_head_spec", "lm_head_apply"]

@@ -1,0 +1,231 @@
+"""Mixture-of-Experts with auto-tuned dispatch format — the paper's
+technique living inside the LM (DESIGN.md §4.2).
+
+The token->expert dispatch matrix is a sparse matrix: rows = experts,
+row length = tokens routed to that expert.  Two dispatch data layouts:
+
+  * **ELL path** (``moe_dispatch="ell"``): fixed-capacity padded buffers
+    (E, C, d) — exactly the ELL format (constant row width, zero fill,
+    overflow dropped).  Dense einsums, shards perfectly over the expert
+    axis; the classic TPU MoE.
+  * **CSR path** (``moe_dispatch="csr"``): dropless — tokens sorted by
+    expert (the CSR row-major order), grouped GEMM via
+    ``jax.lax.ragged_dot`` with ``group_sizes`` as the row-pointer
+    differences.  No drops, no pad, but ragged compute.
+
+``moe_dispatch="auto"`` applies the paper's on-line rule *per step on
+device*: D_mat = sigma/mu of tokens-per-expert (the load-imbalance
+statistic); D_mat < D* -> ELL (uniform rows: padding is cheap, vector
+format wins), else CSR (skewed rows: padding/drops too costly).  Both
+branches are compiled once and selected by ``lax.cond`` — run-time data
+transformation at zero recompile cost."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.rules import ParamSpec, with_logical_constraint as wlc
+
+# Default D* for the dispatch rule; overridable per call. Learned off-line
+# by benchmarks/moe_dispatch.py (the MoE analogue of the D_mat–R_ell graph).
+DEFAULT_D_STAR = 0.5
+
+
+def moe_spec(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamSpec((d, e), ("embed", "experts")),
+        "w_gate": ParamSpec((e, d, ff), ("experts", "embed", "ffn")),
+        "w_up": ParamSpec((e, d, ff), ("experts", "embed", "ffn")),
+        "w_down": ParamSpec((e, ff, d), ("experts", "ffn", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# router
+# ---------------------------------------------------------------------------
+def route(params, x_flat: jax.Array, cfg: ModelConfig):
+    """x_flat: (T, d) -> (expert_ids (T, k), gate_w (T, k), aux_loss)."""
+    logits = (x_flat.astype(jnp.float32)
+              @ params["router"].astype(jnp.float32))          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, expert_ids = jax.lax.top_k(probs, cfg.top_k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss
+    T, E = logits.shape
+    me = probs.mean(axis=0)                                     # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[expert_ids.reshape(-1)].add(
+        1.0 / (T * cfg.top_k))
+    aux = E * jnp.sum(me * ce)
+    return expert_ids, gate_w.astype(x_flat.dtype), aux
+
+
+def dispatch_d_mat(expert_ids: jax.Array, n_experts: int) -> jax.Array:
+    """The paper's D_mat = sigma/mu over tokens-per-expert (eq. 4)."""
+    counts = jnp.zeros((n_experts,), jnp.float32).at[
+        expert_ids.reshape(-1)].add(1.0)
+    mu = counts.mean()
+    sigma = counts.std()
+    return sigma / jnp.maximum(mu, 1e-9)
+
+
+def learn_d_star(points, max_drop_frac: float = 0.05) -> float:
+    """The paper's off-line step (4) applied to MoE dispatch.
+
+    ``points``: iterable of (d_mat, t_ell, t_csr, ell_drop_frac) measured
+    by benchmarks/moe_dispatch.py.  ELL "qualifies" at a given imbalance
+    when it is faster than CSR *and* its capacity drops stay within the
+    quality budget; D* = max qualifying D_mat (0.0 if none)."""
+    qual = [d for d, t_ell, t_csr, drop in points
+            if t_ell < t_csr and drop <= max_drop_frac]
+    return max(qual) if qual else 0.0
+
+
+# ---------------------------------------------------------------------------
+# expert FFN (SwiGLU), shared by both dispatch paths
+# ---------------------------------------------------------------------------
+def _expert_ffn(params, buf: jax.Array, ct) -> jax.Array:
+    """buf: (E, C, d) -> (E, C, d)."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf,
+                               params["w_gate"].astype(ct)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(ct))
+    return jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(ct))
+
+
+# ---------------------------------------------------------------------------
+# ELL (capacity) dispatch — per-sequence batched (GShard group = sequence)
+# ---------------------------------------------------------------------------
+def moe_ell(params, x: jax.Array, expert_ids: jax.Array,
+            gate_w: jax.Array, cfg: ModelConfig,
+            capacity: Optional[int] = None) -> jax.Array:
+    """Fixed-width buffers (B, E, C, d); overflow dropped (mode='drop') —
+    ELL semantics: constant row width, zero padding.
+
+    The scatter/gather is *batched over sequences* (vmap), so under pjit
+    the scatter stays local to the data shard that owns the sequence; the
+    (batch -> experts) buffer resharding between dispatch and expert
+    compute is exactly the EP all-to-all.  (A global flat scatter makes
+    GSPMD replicate the whole token stream — 'involuntary full
+    rematerialization' — observed at 280 GB/device on dbrx train_4k.)"""
+    ct = x.dtype
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    # capacity floor is 1, not 8: at decode (S=1) the top_k experts are
+    # distinct, so C=1 is exact — a floor of 8 made every expert compute 8
+    # padded slots per sequence (measured 15x FLOP inflation on dbrx
+    # decode_32k; the ELL zero-padding pathology, §Perf iteration 2)
+    C = capacity or max(1, int(cfg.capacity_factor * S * k / E))
+    C = min(C, S * k)
+
+    def dispatch_one(xs, ids):                 # xs (S,d), ids (S,k)
+        flat_e = ids.reshape(-1)               # (S*k,)
+        oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+        pos = jnp.cumsum(oh, axis=0) - oh
+        pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+        x_rep = jnp.repeat(xs, k, axis=0)      # (S*k, d)
+        buf = jnp.zeros((E, C, d), ct).at[flat_e, pos_in_e].set(
+            x_rep, mode="drop")
+        return buf, flat_e, pos_in_e
+
+    buf, flat_e, pos_in_e = jax.vmap(dispatch_one)(x, expert_ids)
+    # (batch, experts) buffer: resharding to expert-parallel layout is the
+    # all-to-all of a production MoE.  d carries "embed_act" so the serve
+    # rules keep it aligned with the weights' FSDP axis (§Perf).
+    buf = wlc(buf, ("batch", "experts", None, "embed_act"))
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf,
+                               params["w_gate"].astype(ct)))
+    h = h * jnp.einsum("becd,edf->becf", buf, params["w_up"].astype(ct))
+    out_buf = jnp.einsum("becf,efd->becd", h, params["w_down"].astype(ct))
+    out_buf = wlc(out_buf, ("batch", "experts", None, "embed_act"))
+
+    def combine_one(ob, flat_e_b, pos_b, gw):  # ob (E,C,d)
+        in_cap = pos_b < C
+        g = ob[flat_e_b, jnp.minimum(pos_b, C - 1)]       # (S*k, d)
+        g = jnp.where(in_cap[:, None], g, 0)
+        w = gw.reshape(-1)[:, None].astype(ct)
+        return (g * w).reshape(S, k, d).sum(axis=1)
+
+    return jax.vmap(combine_one)(out_buf, flat_e, pos_in_e, gate_w)
+
+
+# ---------------------------------------------------------------------------
+# CSR (dropless, sorted) dispatch
+# ---------------------------------------------------------------------------
+def moe_csr(params, x_flat: jax.Array, expert_ids: jax.Array,
+            gate_w: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Sort tokens by expert (CSR row order); grouped GEMM with ragged rows
+    via ragged_dot; group_sizes = row-pointer diffs.  Dropless."""
+    ct = x_flat.dtype
+    T, d = x_flat.shape
+    E, k = cfg.n_experts, cfg.top_k
+    flat_e = expert_ids.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)              # CSR ordering
+    inv = jnp.argsort(order, stable=True)
+    xs = jnp.repeat(x_flat, k, axis=0)[order]             # (T*k, d) sorted
+    group_sizes = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+
+    h = jax.nn.silu(jax.lax.ragged_dot(xs, params["w_gate"].astype(ct),
+                                       group_sizes))
+    h = h * jax.lax.ragged_dot(xs, params["w_up"].astype(ct), group_sizes)
+    out_sorted = jax.lax.ragged_dot(h, params["w_down"].astype(ct),
+                                    group_sizes)
+    out = out_sorted[inv]                                  # undo sort
+    w = gate_w.reshape(-1)[:, None].astype(ct)
+    return (out * w).reshape(T, k, d).sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# block-level apply with the auto-tuning rule
+# ---------------------------------------------------------------------------
+def moe_apply(params, x: jax.Array, cfg: ModelConfig,
+              d_star: float = DEFAULT_D_STAR,
+              seq_chunk: int = 4096) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss).  Dispatch per cfg.moe_dispatch.
+
+    Long sequences (prefill_32k) run the ELL dispatch in ``seq_chunk``
+    slices via lax.scan: capacity is per chunk (GShard 'group' semantics)
+    and the (B, E, C, d) dispatch buffers stay bounded by the chunk —
+    without this, 32k-token prefill materializes ~4 GB of pre-all-to-all
+    buffers per MoE layer."""
+    B, S, d = x.shape
+    x_flat = x.reshape(B * S, d)
+    expert_ids_f, gate_w_f, aux = route(params, x_flat, cfg)
+    expert_ids = expert_ids_f.reshape(B, S, cfg.top_k)
+    gate_w = gate_w_f.reshape(B, S, cfg.top_k)
+
+    if cfg.moe_dispatch == "ell":
+        if S > seq_chunk and S % seq_chunk == 0:
+            nch = S // seq_chunk
+            xs = (x.reshape(B, nch, seq_chunk, d).swapaxes(0, 1),
+                  expert_ids.reshape(B, nch, seq_chunk, cfg.top_k
+                                     ).swapaxes(0, 1),
+                  gate_w.reshape(B, nch, seq_chunk, cfg.top_k
+                                 ).swapaxes(0, 1))
+            _, ys = jax.lax.scan(
+                lambda _, c: (None, moe_ell(params, c[0], c[1], c[2], cfg)),
+                None, xs)
+            y = ys.swapaxes(0, 1).reshape(B, S, d)
+        else:
+            y = moe_ell(params, x, expert_ids, gate_w, cfg)
+    elif cfg.moe_dispatch == "csr":
+        y = moe_csr(params, x_flat, expert_ids_f, gate_w_f, cfg
+                    ).reshape(B, S, d)
+    elif cfg.moe_dispatch == "auto":
+        # the paper's on-line phase, on device, per step: D_mat < D* -> ELL
+        d_mat = dispatch_d_mat(expert_ids_f, cfg.n_experts)
+        y = jax.lax.cond(
+            d_mat < d_star,
+            lambda: moe_ell(params, x, expert_ids, gate_w, cfg),
+            lambda: moe_csr(params, x_flat, expert_ids_f, gate_w_f, cfg
+                            ).reshape(B, S, d),
+        )
+    else:
+        raise ValueError(cfg.moe_dispatch)
+    return y, aux
+
+
+__all__ = ["moe_spec", "moe_apply", "moe_ell", "moe_csr", "route",
+           "dispatch_d_mat", "DEFAULT_D_STAR"]

@@ -1,0 +1,188 @@
+"""Mamba-2 (SSD) block — zamba2's backbone.
+
+State-space recurrence per head h with scalar decay:
+    a_t = exp(dt_t * A_h)            (A_h < 0)
+    H_t = a_t * H_{t-1} + dt_t * B_t (x) x_t        H: (state, head_dim)
+    y_t = C_t . H_t + D_h * x_t
+
+Training uses the *chunked* SSD algorithm (intra-chunk quadratic term +
+inter-chunk carried state), the production form on TPU: the quadratic
+intra-chunk term is an MXU-friendly (L x L) matmul and the carried state
+keeps memory O(chunk).  Decode is the one-step recurrence with an
+(state x head_dim) cache per head plus a (conv_w-1)-deep conv cache."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.rules import ParamSpec, with_logical_constraint as wlc
+from .layers import rms_norm
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    heads = d_in // cfg.ssm_head_dim
+    return d_in, heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def mamba_spec(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    d_in, H, hd, N = _dims(cfg)
+    conv_ch = d_in + 2 * N
+    return {
+        # [z (d_in) | x (d_in) | B (N) | C (N) | dt (H)]
+        "in_proj": ParamSpec((d, 2 * d_in + 2 * N + H), ("embed", "inner")),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_ch), ("conv", "inner")),
+        "conv_b": ParamSpec((conv_ch,), ("inner",), init="zeros"),
+        "A_log": ParamSpec((H,), (None,), init="zeros"),
+        "D": ParamSpec((H,), (None,), init="ones"),
+        "dt_bias": ParamSpec((H,), (None,), init="zeros"),
+        "norm": ParamSpec((d_in,), (None,), init="ones"),
+        "out_proj": ParamSpec((d_in, d), ("inner", "embed")),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv: u (B, L, C), w (K, C)."""
+    K = w.shape[0]
+    u_pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(u_pad[:, i:i + u.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    d_in, H, hd, N = _dims(cfg)
+    z, xin, Bm, Cm, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    return z, xin, Bm, Cm, dt
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    d_in, H, hd, N = _dims(cfg)
+    conv_ch = d_in + 2 * N
+    return {
+        "h": jnp.zeros((batch, H, N, hd), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }
+
+
+def mamba_apply(params, x: jax.Array, cfg: ModelConfig, *,
+                cache: Optional[Dict[str, Any]] = None,
+                chunk: int = 256) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B, S, d).  Train/prefill when cache is None (chunked SSD);
+    decode one step when cache is given (S == 1)."""
+    ct = cfg.compute_dtype
+    B, S, d = x.shape
+    d_in, H, hd, N = _dims(cfg)
+    proj = x @ params["in_proj"].astype(ct)               # (B,S,...)
+    proj = wlc(proj, ("batch", "seq", "inner"))
+    z, xin, Bm, Cm, dt_raw = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))     # (H,) negative
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))  # (B,S,H)
+
+    if cache is None or S > 1:
+        conv_out = _causal_conv(conv_in, params["conv_w"].astype(ct),
+                                params["conv_b"].astype(ct))
+        xc, Bc, Cc = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+        xh = xc.reshape(B, S, H, hd).astype(jnp.float32)
+        h0 = None if cache is None else cache["h"]
+        y, h_fin = _ssd_chunked(xh, Bc.astype(jnp.float32),
+                                Cc.astype(jnp.float32), dt, A, chunk=chunk,
+                                h0=h0)                    # (B,S,H,hd) f32
+        y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh
+        if cache is None:
+            new_cache = None
+        else:  # prefill: final SSM state + last (K-1) conv inputs
+            K = cfg.ssm_conv
+            tail = jnp.concatenate(
+                [cache["conv"], conv_in.astype(cache["conv"].dtype)],
+                axis=1)[:, -(K - 1):, :]
+            new_cache = {"h": h_fin, "conv": tail}
+    else:
+        # decode: conv over [cache | current], one recurrence step
+        conv_win = jnp.concatenate([cache["conv"],
+                                    conv_in.astype(cache["conv"].dtype)],
+                                   axis=1)                # (B, K, C)
+        w = params["conv_w"].astype(ct)
+        co = jnp.einsum("bkc,kc->bc", conv_win, w) + params["conv_b"].astype(ct)
+        co = jax.nn.silu(co)[:, None, :]                  # (B,1,C)
+        xc, Bc, Cc = jnp.split(co, [d_in, d_in + N], axis=-1)
+        xh = xc.reshape(B, 1, H, hd).astype(jnp.float32)[:, 0]   # (B,H,hd)
+        Bt = Bc[:, 0].astype(jnp.float32)                 # (B,N)
+        Ct = Cc[:, 0].astype(jnp.float32)
+        dt1 = dt[:, 0]                                    # (B,H)
+        a = jnp.exp(dt1 * A[None, :])                     # (B,H)
+        h_new = (a[:, :, None, None] * cache["h"] +
+                 jnp.einsum("bh,bn,bhd->bhnd", dt1, Bt, xh))
+        y = jnp.einsum("bn,bhnd->bhd", Ct, h_new)
+        y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+        y = y[:, None]                                    # (B,1,H,hd)
+        new_cache = {"h": h_new,
+                     "conv": conv_win[:, 1:].astype(cache["conv"].dtype)}
+
+    y = y.reshape(B, S, d_in).astype(ct)
+    y = rms_norm({"scale": params["norm"]}, y, cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(ct)
+    return wlc(out, ("batch", "seq_sp" if cfg.use_seq_sp else "seq", "embed_act")), new_cache
+
+
+def _ssd_chunked(x: jax.Array, Bm: jax.Array, Cm: jax.Array, dt: jax.Array,
+                 A: jax.Array, *, chunk: int,
+                 h0: Optional[jax.Array] = None):
+    """Chunked SSD: x (B,S,H,hd), Bm/Cm (B,S,N), dt (B,S,H), A (H,).
+
+    Per chunk of length L:
+      intra: y[t] += sum_{s<=t} exp(lam_t - lam_s) dt_s (C_t.B_s) x_s
+      inter: y[t] += exp(lam_t) C_t . Hprev ;
+             Hnew = exp(lam_L) Hprev + sum_s exp(lam_L - lam_s) dt_s B_s x_s^T
+    """
+    B, S, H, hd = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+
+    xc = x.reshape(B, nc, L, H, hd)
+    Bc = Bm.reshape(B, nc, L, N)
+    Cc = Cm.reshape(B, nc, L, N)
+    dtc = dt.reshape(B, nc, L, H)
+
+    def step(h_prev, xs):
+        xk, bk, ck, dtk = xs            # (B,L,H,hd),(B,L,N),(B,L,N),(B,L,H)
+        loga = dtk * A[None, None, :]                     # (B,L,H) <= 0
+        lam = jnp.cumsum(loga, axis=1)                    # (B,L,H)
+        # intra-chunk quadratic term
+        cb = jnp.einsum("bln,bmn->blm", ck, bk)           # (B,L,L)
+        decay = lam[:, :, None, :] - lam[:, None, :, :]   # (B,L,L,H) t,s
+        mask = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])
+        M = jnp.where(mask[None, :, :, None],
+                      jnp.exp(decay) * cb[..., None] * dtk[:, None, :, :], 0.0)
+        y = jnp.einsum("blsh,bshd->blhd", M, xk)
+        # inter-chunk: contribution of carried state
+        y = y + jnp.exp(lam)[..., None] * jnp.einsum(
+            "bln,bhnd->blhd", ck, h_prev)
+        # state update
+        lam_L = lam[:, -1:, :]                            # (B,1,H)
+        w = jnp.exp(lam_L - lam) * dtk                    # (B,L,H)
+        h_new = (jnp.exp(lam_L)[:, 0, :, None, None] * h_prev +
+                 jnp.einsum("blh,bln,blhd->bhnd", w, bk, xk))
+        return h_new, y
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, hd), jnp.float32)
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (xc, Bc, Cc, dtc))
+    # checkpoint the chunk body: recompute the (L x L) intra-chunk decay
+    # matrices in backward instead of saving them
+    h_fin, ys = jax.lax.scan(jax.checkpoint(step), h0, xs)  # (nc,B,L,H,hd)
+    return jnp.moveaxis(ys, 0, 1).reshape(B, S, H, hd), h_fin
+
+
+__all__ = ["mamba_spec", "mamba_apply", "init_mamba_cache"]

@@ -1,0 +1,269 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, exp-input-gate
+with max-stabilizer) and sLSTM (scalar memory with true recurrence and
+per-head block-diagonal recurrent weights).
+
+mLSTM per head (state C: (dk, dv), normalizer n: (dk,), stabilizer m):
+    m_t = max(logsig(f~) + m_{t-1}, i~_t)
+    f'  = exp(logsig(f~) + m_{t-1} - m_t);   i' = exp(i~ - m_t)
+    C_t = f' C_{t-1} + i' k_t (x) v_t;       n_t = f' n_{t-1} + i' k_t
+    y_t = (q_t . C_t) / max(|q_t . n_t|, 1)
+
+sLSTM has no parallel form (the paper's point: real recurrence) — a
+lax.scan over time in both train and decode.  The mLSTM here is the
+step-scan baseline; a chunked parallel form is a perf-pass candidate."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.rules import ParamSpec, with_logical_constraint as wlc
+from .layers import rms_norm
+
+
+def scan_chunked_remat(step, carry0, xs, inner: int = 64):
+    """scan with two-level rematerialization: the outer scan (over chunks of
+    ``inner`` steps) checkpoints only chunk-boundary carries; the inner
+    steps are recomputed in backward.  Peak memory falls from O(S) saved
+    carries to O(S/inner + inner) — the difference between 130 GB and
+    ~10 GB for the mLSTM matrix memory on train_4k."""
+    L = jax.tree.leaves(xs)[0].shape[0]
+    inner = min(inner, L)
+    while L % inner:
+        inner //= 2
+    n_outer = L // inner
+    xs_r = jax.tree.map(
+        lambda a: a.reshape((n_outer, inner) + a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def outer(carry, chunk):
+        return jax.lax.scan(step, carry, chunk)
+
+    carry, ys = jax.lax.scan(outer, carry0, xs_r)
+    ys = jax.tree.map(lambda a: a.reshape((L,) + a.shape[2:]), ys)
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def _mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_in = cfg.mlstm_expand * cfg.d_model
+    H = cfg.n_heads
+    dv = d_in // H
+    dk = max(dv // 2, 8)
+    return d_in, H, dk, dv
+
+
+def mlstm_spec(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    d_in, H, dk, dv = _mlstm_dims(cfg)
+    # separate projections (individually shardable; fused widths are not
+    # generally divisible by the TP degree)
+    return {
+        "w_z": ParamSpec((d, d_in), ("embed", "inner")),
+        "w_q": ParamSpec((d, H * dk), ("embed", "inner")),
+        "w_k": ParamSpec((d, H * dk), ("embed", "inner")),
+        "w_v": ParamSpec((d, d_in), ("embed", "inner")),
+        "w_if": ParamSpec((d, 2 * H), ("embed", None)),
+        "conv_w": ParamSpec((4, d_in), ("conv", "inner")),
+        "conv_b": ParamSpec((d_in,), ("inner",), init="zeros"),
+        "norm": ParamSpec((d_in,), (None,), init="ones"),
+        "out_proj": ParamSpec((d_in, d), ("inner", "embed")),
+    }
+
+
+def _mlstm_proj(cfg: ModelConfig, params, x: jax.Array, ct):
+    d_in, H, dk, dv = _mlstm_dims(cfg)
+    z = x @ params["w_z"].astype(ct)
+    q = x @ params["w_q"].astype(ct)
+    k = x @ params["w_k"].astype(ct)
+    v = x @ params["w_v"].astype(ct)
+    gates = x @ params["w_if"].astype(ct)
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)
+    return z, q, k, v, i_raw, f_raw
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype):
+    d_in, H, dk, dv = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, dk, dv), jnp.float32),
+        "n": jnp.zeros((batch, H, dk), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, 3, d_in), dtype),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    K = w.shape[0]
+    u_pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(u_pad[:, i:i + u.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _mlstm_step(carry, xs):
+    C, n, m = carry
+    q, k, v, i_raw, f_raw = xs     # q,k: (B,H,dk); v: (B,H,dv); gates (B,H)
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + m, i_raw)
+    f_p = jnp.exp(logf + m - m_new)
+    i_p = jnp.exp(i_raw - m_new)
+    C_new = f_p[..., None, None] * C + i_p[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n_new = f_p[..., None] * n + i_p[..., None] * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, C_new)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", q, n_new))
+    y = num / jnp.maximum(den, 1.0)[..., None]
+    return (C_new, n_new, m_new), y
+
+
+def mlstm_apply(params, x: jax.Array, cfg: ModelConfig, *,
+                cache: Optional[Dict[str, Any]] = None
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    ct = cfg.compute_dtype
+    B, S, d = x.shape
+    d_in, H, dk, dv = _mlstm_dims(cfg)
+    z, q, k, v, i_raw, f_raw = _mlstm_proj(cfg, params, x, ct)
+    z = wlc(z, ("batch", "seq", "inner"))
+    v = wlc(v, ("batch", "seq", "inner"))
+
+    if cache is None or S > 1:
+        vc = _causal_conv(v, params["conv_w"].astype(ct),
+                          params["conv_b"].astype(ct))
+        qs = q.reshape(B, S, H, dk).astype(jnp.float32)
+        ks = k.reshape(B, S, H, dk).astype(jnp.float32) / jnp.sqrt(float(dk))
+        vs = vc.reshape(B, S, H, dv).astype(jnp.float32)
+        gi = i_raw.reshape(B, S, H).astype(jnp.float32)
+        gf = f_raw.reshape(B, S, H).astype(jnp.float32)
+        if cache is None:
+            carry0 = (jnp.zeros((B, H, dk, dv), jnp.float32),
+                      jnp.zeros((B, H, dk), jnp.float32),
+                      jnp.full((B, H), -1e30, jnp.float32))
+        else:
+            carry0 = (cache["C"], cache["n"], cache["m"])
+        xs = tuple(jnp.moveaxis(a, 1, 0) for a in (qs, ks, vs, gi, gf))
+        (Cf, nf, mf), ys = scan_chunked_remat(_mlstm_step, carry0, xs)
+        y = jnp.moveaxis(ys, 0, 1)
+        if cache is None:
+            new_cache = None
+        else:  # prefill
+            tail = jnp.concatenate(
+                [cache["conv"], v.astype(cache["conv"].dtype)],
+                axis=1)[:, -3:, :]
+            new_cache = {"C": Cf, "n": nf, "m": mf, "conv": tail}
+    else:
+        conv_win = jnp.concatenate(
+            [cache["conv"], v.astype(cache["conv"].dtype)], axis=1)
+        w = params["conv_w"].astype(ct)
+        vc = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_win, w) +
+                         params["conv_b"].astype(ct))
+        qs = q[:, 0].reshape(B, H, dk).astype(jnp.float32)
+        ks = k[:, 0].reshape(B, H, dk).astype(jnp.float32) / jnp.sqrt(float(dk))
+        vs = vc.reshape(B, H, dv).astype(jnp.float32)
+        gi = i_raw[:, 0].reshape(B, H).astype(jnp.float32)
+        gf = f_raw[:, 0].reshape(B, H).astype(jnp.float32)
+        (C, n, m), y1 = _mlstm_step((cache["C"], cache["n"], cache["m"]),
+                                    (qs, ks, vs, gi, gf))
+        y = y1[:, None]                                    # (B,1,H,dv)
+        new_cache = {"C": C, "n": n, "m": m,
+                     "conv": conv_win[:, 1:].astype(cache["conv"].dtype)}
+
+    y = y.reshape(B, S, d_in).astype(ct)
+    y = rms_norm({"scale": params["norm"]}, y, cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(ct)
+    return wlc(out, ("batch", "seq_sp" if cfg.use_seq_sp else "seq", "embed_act")), new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def _slstm_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    return H, dh
+
+
+def slstm_spec(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    H, dh = _slstm_dims(cfg)
+    # §Perf: the recurrent R matmul runs once per *time step* inside the
+    # scan; sharding its contraction dim inserts an all-reduce per step.
+    # Replicating R (16 MB) keeps every step local.
+    r_axes = (None, None, "inner") if cfg.xlstm_shard_recurrent \
+        else (None, None, None)
+    return {
+        "in_proj": ParamSpec((d, 4 * d), ("embed", "inner")),   # z,i,f,o
+        "R": ParamSpec((H, dh, 4 * dh), r_axes, scale=0.1),     # recurrent
+        "norm": ParamSpec((d,), (None,), init="ones"),
+        "out_proj": ParamSpec((d, d), ("embed", "embed_act")),
+    }
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype):
+    H, dh = _slstm_dims(cfg)
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, H, dh), -1e30,
+                                                  jnp.float32)}
+
+
+def _slstm_step(R, carry, wx):
+    """wx: (B, H, dh, 4) pre-activations from the input projection."""
+    c, n, h, m = carry
+    rec = jnp.einsum("bhd,hde->bhe", h, R)                # (B,H,4*dh)
+    B, H, dh4 = rec.shape
+    dh = dh4 // 4
+    pre = wx + rec.reshape(B, H, dh, 4)
+    z_t = jnp.tanh(pre[..., 0])
+    i_raw = pre[..., 1]
+    f_raw = pre[..., 2]
+    o_t = jax.nn.sigmoid(pre[..., 3])
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + m, i_raw)
+    f_p = jnp.exp(logf + m - m_new)
+    i_p = jnp.exp(i_raw - m_new)
+    c_new = f_p * c + i_p * z_t
+    n_new = f_p * n + i_p
+    h_new = o_t * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_apply(params, x: jax.Array, cfg: ModelConfig, *,
+                cache: Optional[Dict[str, Any]] = None
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    ct = cfg.compute_dtype
+    B, S, d = x.shape
+    H, dh = _slstm_dims(cfg)
+    wx = (x @ params["in_proj"].astype(ct)).astype(jnp.float32)
+    wx = wx.reshape(B, S, H, dh, 4)
+    R = params["R"].astype(jnp.float32)
+
+    if cache is None or S > 1:
+        if cache is None:
+            z0 = jnp.zeros((B, H, dh), jnp.float32)
+            carry0 = (z0, z0, z0, jnp.full((B, H, dh), -1e30, jnp.float32))
+        else:
+            carry0 = (cache["c"], cache["n"], cache["h"], cache["m"])
+        (c, n, h, m), ys = scan_chunked_remat(
+            lambda cr, w: _slstm_step(R, cr, w), carry0,
+            jnp.moveaxis(wx, 1, 0))
+        y = jnp.moveaxis(ys, 0, 1)                        # (B,S,H,dh)
+        new_cache = (None if cache is None
+                     else {"c": c, "n": n, "h": h, "m": m})
+    else:
+        (c, n, h, m), y1 = _slstm_step(
+            R, (cache["c"], cache["n"], cache["h"], cache["m"]), wx[:, 0])
+        y = y1[:, None]
+        new_cache = {"c": c, "n": n, "h": h, "m": m}
+
+    y = y.reshape(B, S, d).astype(ct)
+    y = rms_norm({"scale": params["norm"]}, y, cfg.norm_eps)
+    out = y @ params["out_proj"].astype(ct)
+    return wlc(out, ("batch", "seq_sp" if cfg.use_seq_sp else "seq", "embed_act")), new_cache
+
+
+__all__ = ["mlstm_spec", "mlstm_apply", "init_mlstm_cache",
+           "slstm_spec", "slstm_apply", "init_slstm_cache"]

@@ -1,0 +1,1 @@
+from .gpipe import bubble_fraction, pipeline_forward, reference_forward

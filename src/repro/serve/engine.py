@@ -1,0 +1,148 @@
+"""Batched decode engine with continuous batching.
+
+Fixed pool of B slots over one shared cache tree; per-slot sequence
+lengths (the decode path takes a (B,) cache_len vector).  New requests are
+admitted into idle slots by running a single-sequence prefill and
+scatter-inserting its caches at the slot's batch index; completed slots
+free immediately — the decode step never waits for the longest request.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                      # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+def _insert_cache(caches, slot_caches, b: int):
+    """Insert a single-sequence cache tree at batch index b."""
+    return jax.tree.map(
+        lambda full, one: _insert_leaf(full, one, b), caches, slot_caches)
+
+
+def _insert_leaf(full: jax.Array, one: jax.Array, b: int) -> jax.Array:
+    # cache leaves: stacked (reps, B, ...) or (B, ...); single-seq tree has
+    # batch size 1 at the same position
+    if full.ndim == one.ndim and one.shape[0] == 1 and \
+            full.shape[0] != one.shape[0]:
+        return jax.lax.dynamic_update_slice_in_dim(full, one.astype(
+            full.dtype), b, axis=0)
+    # stacked: batch is axis 1
+    return jax.lax.dynamic_update_slice_in_dim(full, one.astype(full.dtype),
+                                               b, axis=1)
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, max_batch: int = 4,
+                 max_len: int = 256, dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.B = max_batch
+        self.max_len = max_len
+        self.caches = M.init_caches(cfg, max_batch, max_len, dtype)
+        self.lengths = np.zeros(max_batch, np.int32)
+        self.active: List[Optional[Request]] = [None] * max_batch
+        self.last_tokens = np.zeros((max_batch, 1), np.int32)
+        self.queue: List[Request] = []
+        self.finished: Dict[int, Request] = {}
+        self._next_rid = 0
+
+        self._prefill = jax.jit(
+            lambda p, b, c: M.prefill(p, b, c, cfg))
+        self._decode = jax.jit(
+            lambda p, t, c, n: M.decode_step(p, t, c, n, cfg))
+
+    # -- request lifecycle ----------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               eos_id: Optional[int] = None) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid=rid, prompt=np.asarray(
+            prompt, np.int32), max_new_tokens=max_new_tokens, eos_id=eos_id))
+        return rid
+
+    def _admit(self) -> None:
+        for b in range(self.B):
+            if self.active[b] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            S = len(req.prompt)
+            one_caches = M.init_caches(self.cfg, 1, self.max_len,
+                                       jax.tree.leaves(
+                                           self.caches)[0].dtype)
+            batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+            if self.cfg.frontend:
+                batch["frontend_embeds"] = jnp.zeros(
+                    (1, self.cfg.frontend_len, self.cfg.d_model),
+                    jnp.float32)
+            logits, one_caches = self._prefill(self.params, batch,
+                                               one_caches)
+            first = int(jnp.argmax(logits[0, -1]))
+            self.caches = _insert_cache(self.caches, one_caches, b)
+            self.active[b] = req
+            self.lengths[b] = S + (self.cfg.frontend_len
+                                   if self.cfg.frontend else 0)
+            req.generated.append(first)
+            self.last_tokens[b, 0] = first
+            self._maybe_finish(b)
+
+    def _maybe_finish(self, b: int) -> None:
+        req = self.active[b]
+        if req is None:
+            return
+        if (len(req.generated) >= req.max_new_tokens or
+                (req.eos_id is not None and req.generated and
+                 req.generated[-1] == req.eos_id) or
+                int(self.lengths[b]) >= self.max_len - 1):
+            req.done = True
+            self.finished[req.rid] = req
+            self.active[b] = None
+
+    # -- one decode step for the whole pool ------------------------------------
+    def step(self) -> int:
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return 0
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(self.last_tokens), self.caches,
+            jnp.asarray(self.lengths))
+        next_tokens = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1),
+                                 np.int32)
+        n_active = 0
+        for b in range(self.B):
+            req = self.active[b]
+            if req is None:
+                continue
+            self.lengths[b] += 1
+            tok = int(next_tokens[b])
+            req.generated.append(tok)
+            self.last_tokens[b, 0] = tok
+            n_active += 1
+            self._maybe_finish(b)
+        return n_active
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        steps = 0
+        while (self.queue or any(r is not None for r in self.active)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished
+
+
+__all__ = ["ServeEngine", "Request"]

@@ -1,0 +1,3 @@
+from .rules import (ParamSpec, ShardingRules, RULES_1POD, RULES_2POD,
+                    axes_tree, init_params, logical_to_sharding, param_count,
+                    stack_spec, with_logical_constraint)

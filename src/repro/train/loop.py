@@ -1,0 +1,167 @@
+"""Fault-tolerant training loop.
+
+Production posture (DESIGN.md §6):
+  * periodic async checkpoints (atomic; latest-K kept);
+  * ``run_with_restarts``: any step failure (injected or real) restores the
+    latest committed checkpoint and resumes — the data pipeline is
+    seekable, so the resumed trajectory is bit-exact;
+  * step-time watchdog: an EMA of step latency flags stragglers (on a real
+    cluster this triggers hot-spare pod swap; here it logs and counts);
+  * metrics hook per step.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.configs.base import ModelConfig
+from repro.data import Prefetcher, SyntheticLM
+from repro.models import model as M
+from repro.optim import adamw
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep_ckpts: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0   # step > factor * EMA -> flagged
+    microbatches: int = 1
+    seed: int = 0
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt_state: adamw.AdamWState
+    step: int = 0
+
+
+class StragglerWatchdog:
+    def __init__(self, factor: float):
+        self.factor = factor
+        self.ema: Optional[float] = None
+        self.flagged: List[int] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        slow = self.ema is not None and dt > self.factor * self.ema
+        if slow:
+            self.flagged.append(step)
+        self.ema = dt if self.ema is None else 0.9 * self.ema + 0.1 * dt
+        return slow
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, data: SyntheticLM,
+                 tc: TrainConfig,
+                 opt_cfg: Optional[adamw.AdamWConfig] = None,
+                 failure_hook: Optional[Callable[[int], None]] = None):
+        self.cfg = cfg
+        self.data = data
+        self.tc = tc
+        self.opt_cfg = opt_cfg or adamw.AdamWConfig(
+            total_steps=tc.steps, warmup_steps=max(tc.steps // 20, 1))
+        self.failure_hook = failure_hook
+        self.ckpt = AsyncCheckpointer(tc.ckpt_dir, keep=tc.keep_ckpts)
+        self.watchdog = StragglerWatchdog(tc.straggler_factor)
+        self.metrics: List[Dict[str, float]] = []
+
+        from repro.launch.steps import make_train_step
+        self._step_fn = jax.jit(
+            make_train_step(cfg, self.opt_cfg,
+                            microbatches=tc.microbatches))
+
+    # -- state management ----------------------------------------------------
+    def init_state(self) -> TrainState:
+        params = M.init(self.cfg, jax.random.PRNGKey(self.tc.seed))
+        return TrainState(params=params, opt_state=adamw.init(params),
+                          step=0)
+
+    def save(self, state: TrainState) -> None:
+        self.ckpt.save_async(
+            state.step,
+            {"params": state.params, "opt": state.opt_state},
+            extra={"step": state.step})
+
+    def try_restore(self) -> Optional[TrainState]:
+        s = latest_step(self.tc.ckpt_dir)
+        if s is None:
+            return None
+        template = self.init_state()
+        tree, extra = restore(self.tc.ckpt_dir, s,
+                              {"params": template.params,
+                               "opt": template.opt_state})
+        return TrainState(params=tree["params"], opt_state=tree["opt"],
+                          step=int(extra["step"]))
+
+    # -- the loop -------------------------------------------------------------
+    def run(self, state: TrainState,
+            until: Optional[int] = None) -> TrainState:
+        until = until if until is not None else self.tc.steps
+        prefetch = Prefetcher(self.data, start_step=state.step)
+        try:
+            while state.step < until:
+                step_idx, batch = prefetch.next()
+                assert step_idx == state.step, "seekable-data invariant"
+                if self.failure_hook is not None:
+                    self.failure_hook(state.step)  # may raise (injection)
+                t0 = time.perf_counter()
+                params, opt_state, m = self._step_fn(
+                    state.params, state.opt_state,
+                    jax.tree.map(jnp.asarray, batch))
+                jax.block_until_ready(m["loss"])
+                dt = time.perf_counter() - t0
+                slow = self.watchdog.observe(state.step, dt)
+                state = TrainState(params=params, opt_state=opt_state,
+                                   step=state.step + 1)
+                rec = {"step": state.step, "loss": float(m["loss"]),
+                       "grad_norm": float(m["grad_norm"]),
+                       "sec_per_step": dt, "straggler": bool(slow)}
+                self.metrics.append(rec)
+                if state.step % self.tc.log_every == 0:
+                    print(f"[train] step={rec['step']} "
+                          f"loss={rec['loss']:.4f} "
+                          f"gnorm={rec['grad_norm']:.3f} "
+                          f"{dt*1e3:.0f}ms" +
+                          (" STRAGGLER" if slow else ""))
+                if state.step % self.tc.ckpt_every == 0:
+                    self.save(state)
+            self.ckpt.wait()
+            return state
+        finally:
+            prefetch.close()
+
+
+def run_with_restarts(trainer: Trainer, max_restarts: int = 3,
+                      until: Optional[int] = None) -> TrainState:
+    """The fault-tolerance driver: on any step failure, restore the latest
+    committed checkpoint (or reinit) and resume; give up after
+    ``max_restarts`` consecutive failures."""
+    restarts = 0
+    state = trainer.try_restore() or trainer.init_state()
+    while True:
+        try:
+            return trainer.run(state, until=until)
+        except Exception as e:  # noqa: BLE001 — any failure triggers restart
+            restarts += 1
+            print(f"[train] FAILURE at step {state.step}: {e}; "
+                  f"restart {restarts}/{max_restarts}")
+            if restarts > max_restarts:
+                raise
+            try:
+                trainer.ckpt.wait()
+            except Exception:
+                pass
+            state = trainer.try_restore() or trainer.init_state()
+
+
+__all__ = ["TrainConfig", "TrainState", "Trainer", "run_with_restarts",
+           "StragglerWatchdog"]

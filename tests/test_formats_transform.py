@@ -1,0 +1,214 @@
+"""Format + transformation correctness: round trips, the paper's CRS->CCS
+algorithm vs its vectorized/device versions, property tests via hypothesis."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CSR, MatrixStats, csr_from_dense, host_csr_to_ccs,
+                        host_csr_to_ccs_paper, host_csr_to_coo_col,
+                        host_csr_to_coo_row, host_csr_to_ell,
+                        host_csr_to_sell, device_csr_to_ccs,
+                        device_csr_to_coo_col, device_csr_to_coo_row,
+                        device_csr_to_ell, memory_bytes)
+from repro.core.suite import synthesize, TABLE1
+
+
+def random_dense(rng, n_rows, n_cols, density):
+    d = (rng.random((n_rows, n_cols)) < density).astype(np.float32)
+    return d * rng.normal(1.0, 1.0, size=d.shape).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# dense round trips
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape,density", [((7, 5), 0.3), ((64, 64), 0.05),
+                                           ((33, 129), 0.15), ((1, 8), 0.5),
+                                           ((128, 16), 0.9)])
+def test_csr_roundtrip(rng, shape, density):
+    dense = random_dense(rng, *shape, density)
+    m = csr_from_dense(dense, pad=8)
+    np.testing.assert_allclose(m.todense(), dense, rtol=1e-6)
+
+
+@pytest.mark.parametrize("transform", [host_csr_to_coo_row,
+                                       host_csr_to_coo_col,
+                                       host_csr_to_ell,
+                                       host_csr_to_sell,
+                                       host_csr_to_ccs])
+def test_transform_preserves_matrix(rng, transform):
+    dense = random_dense(rng, 50, 40, 0.12)
+    m = csr_from_dense(dense, pad=8)
+    np.testing.assert_allclose(transform(m).todense(), dense, rtol=1e-6)
+
+
+def test_ell_col_order(rng):
+    dense = random_dense(rng, 20, 30, 0.2)
+    m = csr_from_dense(dense)
+    ell = host_csr_to_ell(m, order="col")
+    assert ell.data.shape[1] == 20  # (width, n_rows)
+    np.testing.assert_allclose(ell.todense(), dense, rtol=1e-6)
+
+
+def test_ell_width_truncation(rng):
+    dense = random_dense(rng, 16, 16, 0.5)
+    m = csr_from_dense(dense)
+    ell = host_csr_to_ell(m, width=2)
+    assert ell.width == 2
+    assert ell.nnz <= m.nnz
+    # every stored entry must be a real matrix entry
+    d = ell.todense()
+    mask = d != 0
+    np.testing.assert_allclose(d[mask], dense[mask], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# the paper's CRS->CCS counting algorithm is the oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape,density", [((9, 9), 0.3), ((17, 40), 0.1),
+                                           ((40, 17), 0.25)])
+def test_ccs_matches_paper_algorithm(rng, shape, density):
+    dense = random_dense(rng, *shape, density)
+    m = csr_from_dense(dense, pad=4)
+    ref = host_csr_to_ccs_paper(m)
+    fast = host_csr_to_ccs(m)
+    np.testing.assert_array_equal(np.asarray(ref.indptr),
+                                  np.asarray(fast.indptr))
+    np.testing.assert_array_equal(np.asarray(ref.rows)[:m.nnz],
+                                  np.asarray(fast.rows)[:m.nnz])
+    np.testing.assert_allclose(np.asarray(ref.data)[:m.nnz],
+                               np.asarray(fast.data)[:m.nnz])
+
+
+# ---------------------------------------------------------------------------
+# device (jit) transformations == host transformations
+# ---------------------------------------------------------------------------
+def test_device_ell_matches_host(rng):
+    dense = random_dense(rng, 48, 32, 0.2)
+    m = csr_from_dense(dense, pad=8)
+    host = host_csr_to_ell(m)
+    dev = jax.jit(lambda mm: device_csr_to_ell(mm, width=host.width))(m)
+    np.testing.assert_allclose(np.asarray(dev.data), host.data, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(dev.cols), host.cols)
+
+
+def test_device_coo_row_matches_host(rng):
+    dense = random_dense(rng, 31, 31, 0.15)
+    m = csr_from_dense(dense, pad=8)
+    host = host_csr_to_coo_row(m)
+    dev = jax.jit(device_csr_to_coo_row)(m)
+    np.testing.assert_array_equal(np.asarray(dev.rows)[:m.nnz],
+                                  host.rows[:m.nnz])
+
+
+def test_device_coo_col_and_ccs(rng):
+    dense = random_dense(rng, 25, 37, 0.2)
+    m = csr_from_dense(dense, pad=8)
+    host = host_csr_to_coo_col(m)
+    dev = jax.jit(device_csr_to_coo_col)(m)
+    np.testing.assert_array_equal(np.asarray(dev.cols)[:m.nnz],
+                                  host.cols[:m.nnz])
+    np.testing.assert_array_equal(np.asarray(dev.rows)[:m.nnz],
+                                  host.rows[:m.nnz])
+    np.testing.assert_allclose(np.asarray(dev.data)[:m.nnz],
+                               host.data[:m.nnz])
+    dccs = jax.jit(device_csr_to_ccs)(m)
+    np.testing.assert_array_equal(np.asarray(dccs.indptr),
+                                  np.asarray(host_csr_to_ccs(m).indptr))
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+@settings(deadline=None, max_examples=30)
+@given(n_rows=st.integers(1, 40), n_cols=st.integers(1, 40),
+       density=st.floats(0.01, 0.9), seed=st.integers(0, 2**31 - 1))
+def test_property_all_transforms_preserve_spmv(n_rows, n_cols, density, seed):
+    """Invariant: every format transformation preserves A @ x."""
+    r = np.random.default_rng(seed)
+    dense = random_dense(r, n_rows, n_cols, density)
+    m = csr_from_dense(dense, pad=4)
+    x = r.normal(size=n_cols).astype(np.float32)
+    want = dense @ x
+    for tr in (host_csr_to_coo_row, host_csr_to_coo_col, host_csr_to_ell,
+               host_csr_to_sell, host_csr_to_ccs):
+        got = tr(m).todense() @ x
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 60))
+def test_property_dmat_scale_invariant(seed, n):
+    """D_mat is invariant under value scaling (depends only on structure)."""
+    r = np.random.default_rng(seed)
+    dense = random_dense(r, n, n, 0.2)
+    if (dense != 0).sum() == 0:
+        return
+    m1 = csr_from_dense(dense)
+    m2 = csr_from_dense(dense * 7.5)
+    assert MatrixStats.of(m1).d_mat == pytest.approx(MatrixStats.of(m2).d_mat)
+
+
+# ---------------------------------------------------------------------------
+# suite reproduces Table 1 statistics
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("spec", TABLE1, ids=lambda s: s.name)
+def test_suite_matches_table1(spec):
+    scale = min(1.0, 4000 / spec.n)  # keep CI fast; stats are scale-invariant
+    m = synthesize(spec, scale=scale)
+    st_ = MatrixStats.of(m)
+    assert st_.mu == pytest.approx(spec.mu, rel=0.2)
+    assert st_.d_mat == pytest.approx(spec.d_mat, rel=0.3, abs=0.03)
+
+
+def test_sell_memory_bounded(rng):
+    """sigma-sorted bucketing must not blow up memory vs plain ELL."""
+    spec = [s for s in TABLE1 if s.name == "memplus"][0]
+    m = synthesize(spec, scale=0.2)
+    ell = host_csr_to_ell(m)
+    sell = host_csr_to_sell(m)
+    assert sell.padded_nnz() <= np.prod(ell.data.shape)
+    assert memory_bytes(sell) <= memory_bytes(ell) * 1.05
+
+
+# ---------------------------------------------------------------------------
+# BCSR (the paper's named future work)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape,density,block", [
+    ((32, 32), 0.2, 8), ((65, 40), 0.1, 8), ((16, 16), 0.9, 4),
+    ((100, 64), 0.05, 16)])
+def test_bcsr_roundtrip_and_spmv(rng, shape, density, block):
+    from repro.core.transform import host_csr_to_bcsr
+    from repro.core.spmv import spmv_bcsr
+    from repro.core.formats import bcsr_fill_ratio
+    dense = random_dense(rng, *shape, density)
+    m = csr_from_dense(dense, pad=4)
+    bm = host_csr_to_bcsr(m, block=block)
+    np.testing.assert_allclose(bm.todense(), dense, rtol=1e-6)
+    x = rng.normal(size=shape[1]).astype(np.float32)
+    got = jax.jit(spmv_bcsr)(bm, jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), dense @ x,
+                               rtol=2e-4, atol=2e-4)
+    assert 0 < bcsr_fill_ratio(bm) <= 1.0
+
+
+def test_bcsr_fill_ratio_tracks_structure(rng):
+    """Banded matrices fill blocks densely; scattered ones don't — the
+    statistic the AT method would threshold on for BCSR (like D_mat for
+    ELL)."""
+    from repro.core.transform import host_csr_to_bcsr
+    from repro.core.formats import bcsr_fill_ratio
+    from repro.core.suite import synthesize, TABLE1
+    banded = synthesize([s for s in TABLE1 if s.name == "chem_master1"][0],
+                        scale=0.03)
+    scattered = synthesize([s for s in TABLE1 if s.name == "memplus"][0],
+                           scale=0.03)
+    fb = bcsr_fill_ratio(host_csr_to_bcsr(banded, block=4))
+    fs = bcsr_fill_ratio(host_csr_to_bcsr(scattered, block=4))
+    assert fb > fs

@@ -1,0 +1,230 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret=True."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (csr_from_dense, host_csr_to_coo_col,
+                        host_csr_to_coo_row, host_csr_to_ell,
+                        host_csr_to_sell)
+from repro.kernels import ops, ref
+
+
+def random_dense(rng, n_rows, n_cols, density, dtype=np.float32):
+    d = (rng.random((n_rows, n_cols)) < density).astype(dtype)
+    return d * rng.normal(1.0, 1.0, size=d.shape).astype(dtype)
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(7)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# ELL SpMV: aligned + ragged shapes, f32 + bf16
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n_rows,width,n_cols", [
+    (256, 128, 512),     # exactly one block
+    (512, 256, 300),     # multi-block both axes
+    (8, 8, 16),          # minimum tile
+    (100, 37, 61),       # ragged -> wrapper pads
+    (1024, 5, 2048),     # skinny band
+])
+def test_ell_spmv_kernel(rng, n_rows, width, n_cols, dtype):
+    data = rng.normal(size=(n_rows, width)).astype(np.float32)
+    mask = rng.random((n_rows, width)) < 0.7
+    data = np.where(mask, data, 0.0)
+    cols = np.where(mask, rng.integers(0, n_cols, (n_rows, width)), 0)
+    x = rng.normal(size=(n_cols,)).astype(np.float32)
+    d, c, xx = (jnp.asarray(data, dtype), jnp.asarray(cols, jnp.int32),
+                jnp.asarray(x, dtype))
+    got = ops.ell_spmv_raw(d, c, xx, interpret=True)
+    want = ref.ell_spmv_ref(d, c, xx)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("n_rows,width,n_cols,k", [
+    (128, 128, 256, 128),
+    (64, 40, 100, 17),
+    (8, 8, 8, 8),
+])
+def test_ell_spmm_kernel(rng, n_rows, width, n_cols, k):
+    data = rng.normal(size=(n_rows, width)).astype(np.float32)
+    cols = rng.integers(0, n_cols, (n_rows, width)).astype(np.int32)
+    x = rng.normal(size=(n_cols, k)).astype(np.float32)
+    got = ops.ell_spmm_raw(jnp.asarray(data), jnp.asarray(cols),
+                           jnp.asarray(x), interpret=True)
+    want = ref.ell_spmm_ref(jnp.asarray(data), jnp.asarray(cols),
+                            jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# COO SpMV: sorted + unsorted rows, duplicates allowed
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("nnz,n_rows,n_cols,sort", [
+    (4096, 128, 128, True),
+    (1000, 64, 256, False),
+    (8, 8, 8, True),
+    (9000, 333, 77, False),
+])
+def test_coo_spmv_kernel(rng, nnz, n_rows, n_cols, sort):
+    rows = rng.integers(0, n_rows, nnz).astype(np.int32)
+    if sort:
+        rows = np.sort(rows)
+    cols = rng.integers(0, n_cols, nnz).astype(np.int32)
+    data = rng.normal(size=nnz).astype(np.float32)
+    x = rng.normal(size=n_cols).astype(np.float32)
+    got = ops.coo_spmv_raw(jnp.asarray(data), jnp.asarray(rows),
+                           jnp.asarray(cols), jnp.asarray(x), n_rows,
+                           interpret=True)
+    want = ref.coo_spmv_ref(jnp.asarray(data), jnp.asarray(rows),
+                            jnp.asarray(cols), jnp.asarray(x), n_rows)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# format-level kernels vs dense oracle (all formats through one matrix)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("impl,transform", [
+    (ops.spmv_csr, lambda m: m),
+    (ops.spmv_coo, host_csr_to_coo_row),
+    (ops.spmv_coo, host_csr_to_coo_col),
+    (ops.spmv_ell, host_csr_to_ell),
+    (ops.spmv_ell, lambda m: host_csr_to_ell(m, order="col")),
+    (ops.spmv_sell, host_csr_to_sell),
+], ids=["csr", "coo_row", "coo_col", "ell_row", "ell_col", "sell"])
+def test_format_kernels_vs_dense(rng, impl, transform):
+    dense = random_dense(rng, 200, 150, 0.08)
+    m = transform(csr_from_dense(dense, pad=8))
+    x = rng.normal(size=150).astype(np.float32)
+    got = impl(m, jnp.asarray(x), interpret=True)
+    np.testing.assert_allclose(np.asarray(got), dense @ x,
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# property sweep: kernel == oracle on random ELL structures
+# ---------------------------------------------------------------------------
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 2**31 - 1), n_rows=st.integers(1, 300),
+       width=st.integers(1, 150), n_cols=st.integers(1, 400))
+def test_property_ell_kernel(seed, n_rows, width, n_cols):
+    r = np.random.default_rng(seed)
+    data = jnp.asarray(r.normal(size=(n_rows, width)).astype(np.float32))
+    cols = jnp.asarray(r.integers(0, n_cols, (n_rows, width)), jnp.int32)
+    x = jnp.asarray(r.normal(size=n_cols).astype(np.float32))
+    got = ops.ell_spmv_raw(data, cols, x, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.ell_spmv_ref(data, cols, x)),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# gradients through the differentiable wrapper
+# ---------------------------------------------------------------------------
+def test_ell_spmv_ad_grads(rng):
+    n_rows, width, n_cols = 32, 16, 48
+    data = rng.normal(size=(n_rows, width)).astype(np.float32)
+    cols = rng.integers(0, n_cols, (n_rows, width)).astype(np.int32)
+    x = rng.normal(size=n_cols).astype(np.float32)
+    d, c, xx = jnp.asarray(data), jnp.asarray(cols), jnp.asarray(x)
+
+    def loss_kernel(dd, v):
+        return jnp.sum(ops.ell_spmv_ad(dd, c, v) ** 2)
+
+    def loss_ref(dd, v):
+        return jnp.sum(ref.ell_spmv_ref(dd, c, v) ** 2)
+
+    gd_k, gx_k = jax.grad(loss_kernel, argnums=(0, 1))(d, xx)
+    gd_r, gx_r = jax.grad(loss_ref, argnums=(0, 1))(d, xx)
+    np.testing.assert_allclose(np.asarray(gd_k), np.asarray(gd_r),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gx_k), np.asarray(gx_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_autotune_integration(rng):
+    """The auto-tuner runs end-to-end with kernel impls plugged in."""
+    from repro.core import offline_phase
+    from repro.core.suite import paper_suite
+    suite = paper_suite(scale=0.01, include=["wang3", "memplus"])
+    db = offline_phase(suite, formats=("ell_row",), iters=1,
+                       spmv_impls=ops.KERNEL_SPMV_IMPLS, machine="kernel-cpu")
+    assert "ell_row" in db.d_star
+    assert all("ell_row" in r.formats for r in db.records)
+
+
+# ---------------------------------------------------------------------------
+# fused int8-KV flash-decode attention kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,KV,G,Dh,window", [
+    (2, 512, 2, 3, 64, None),     # one chunk exactly
+    (1, 1024, 4, 1, 128, None),   # multi-chunk
+    (3, 640, 2, 2, 32, 256),      # ragged chunks + sliding window
+    (2, 512, 1, 6, 64, 128),      # MQA grouping + window
+])
+def test_decode_attention_int8_kernel(rng, B, S, KV, G, Dh, window):
+    from repro.kernels.decode_attention import decode_attention_int8
+    q = jnp.asarray(rng.normal(size=(B, KV, G, Dh)).astype(np.float32))
+    k_q = jnp.asarray(rng.integers(-127, 128, (B, S, KV, Dh)), jnp.int8)
+    v_q = jnp.asarray(rng.integers(-127, 128, (B, S, KV, Dh)), jnp.int8)
+    k_s = jnp.asarray(rng.random((B, S, KV)).astype(np.float32) * 0.02)
+    v_s = jnp.asarray(rng.random((B, S, KV)).astype(np.float32) * 0.02)
+    lens = rng.integers(S // 2, S, size=B)
+    key_pos = jnp.asarray(
+        np.where(np.arange(S)[None, :] < lens[:, None],
+                 np.arange(S)[None, :], -1), jnp.int32)
+    q_pos = jnp.asarray(lens - 1, jnp.int32)
+
+    s_chunk = 512
+    pad = (-S) % s_chunk
+    if pad:
+        padz = lambda a, fill=0: jnp.pad(
+            a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2),
+            constant_values=fill)
+        k_qp, v_qp = padz(k_q), padz(v_q)
+        k_sp, v_sp = padz(k_s), padz(v_s)
+        kpp = padz(key_pos, fill=-1)
+    else:
+        k_qp, v_qp, k_sp, v_sp, kpp = k_q, v_q, k_s, v_s, key_pos
+
+    got = decode_attention_int8(q, k_qp, k_sp, v_qp, v_sp, kpp, q_pos,
+                                window=window, s_chunk=s_chunk,
+                                interpret=True)
+    want = ref.decode_attention_int8_ref(q, k_q, k_s, v_q, v_s, key_pos,
+                                         q_pos, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_int8_matches_model_decode(rng):
+    """The kernel agrees with the model's quantized decode path end to end
+    (same quantizer, same masking semantics)."""
+    from repro.models.attention import _quantize_kv
+    from repro.kernels.decode_attention import decode_attention_int8
+    B, S, KV, G, Dh = 2, 512, 2, 2, 32
+    k = rng.normal(size=(B, S, KV, Dh)).astype(np.float32)
+    v = rng.normal(size=(B, S, KV, Dh)).astype(np.float32)
+    k_q, k_s = _quantize_kv(jnp.asarray(k))
+    v_q, v_s = _quantize_kv(jnp.asarray(v))
+    q = jnp.asarray(rng.normal(size=(B, KV, G, Dh)).astype(np.float32))
+    key_pos = jnp.broadcast_to(jnp.arange(S), (B, S)).astype(jnp.int32)
+    q_pos = jnp.asarray([S - 1, S // 2], jnp.int32)
+
+    got = decode_attention_int8(q, k_q, k_s, v_q, v_s, key_pos, q_pos,
+                                interpret=True)
+    want = ref.decode_attention_int8_ref(q, k_q, k_s, v_q, v_s, key_pos,
+                                         q_pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

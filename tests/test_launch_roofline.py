@@ -1,0 +1,165 @@
+"""Launch layer: roofline HLO parsing, input specs, microbatch policy,
+mesh helpers, dry-run artifact sanity."""
+import glob
+import json
+import os
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.launch.roofline import (CollectiveStats, Roofline,
+                                   parse_collectives, _shape_bytes)
+from repro.launch.steps import default_microbatches, input_specs
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parser
+# ---------------------------------------------------------------------------
+HLO_SAMPLE = """
+  %x = bf16[16,4096]{1,0} parameter(0)
+  %ag = bf16[16,4096]{1,0} all-gather(%x), replica_groups={{0,1}}
+  %ar = f32[128]{0} all-reduce(%y), to_apply=%add
+  %tuple.ar = (f32[8]{0}, f32[8]{0}) all-reduce(%a, %b), to_apply=%add
+  %rs = f32[2,64]{1,0} reduce-scatter(%z), dimensions={0}
+  %a2a = s8[1024]{0} all-to-all(%w), dimensions={0}
+  %cp = bf16[32,32]{1,0} collective-permute(%v), source_target_pairs={{0,1}}
+  %notacoll = f32[4096]{0} add(%p, %q)
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[16,4096]{1,0}") == 16 * 4096 * 2
+    assert _shape_bytes("f32[128]") == 512
+    assert _shape_bytes("(f32[8], f32[8])") == 64
+    assert _shape_bytes("pred[10]") == 10
+    assert _shape_bytes("f32[]") == 4   # scalar
+
+
+def test_parse_collectives():
+    st = parse_collectives(HLO_SAMPLE)
+    assert st.count_by_op == {"all-gather": 1, "all-reduce": 2,
+                              "reduce-scatter": 1, "all-to-all": 1,
+                              "collective-permute": 1}
+    assert st.bytes_by_op["all-gather"] == 16 * 4096 * 2
+    assert st.bytes_by_op["all-reduce"] == 128 * 4 + 2 * 8 * 4
+    assert st.bytes_by_op["all-to-all"] == 1024
+    assert st.total_bytes == sum(st.bytes_by_op.values())
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(arch="a", shape="s", mesh="m", chips=256,
+                 hlo_flops=197e12, hlo_bytes=819e9,
+                 collective_bytes=100e9, model_flops=197e12 * 256 * 0.5)
+    r.finalize()
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(1.0)
+    assert r.t_collective == pytest.approx(2.0)
+    assert r.bottleneck == "collective"
+    assert r.useful_ratio == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# input specs per cell
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["internvl2-2b", "musicgen-medium",
+                                  "qwen3-1.7b"])
+def test_input_specs_cover_seq_len(arch):
+    cfg = get_config(arch)
+    for shape in SHAPES.values():
+        specs = input_specs(cfg, shape)
+        if shape.kind == "decode":
+            assert specs["tokens"].shape == (shape.global_batch, 1)
+            continue
+        total = specs["tokens"].shape[1]
+        if cfg.frontend:
+            total += specs["frontend_embeds"].shape[1]
+        assert total == shape.seq_len
+        assert specs["tokens"].shape[0] == shape.global_batch
+
+
+def test_microbatch_policy_scales_with_model():
+    small = get_config("qwen3-1.7b")
+    big = get_config("dbrx-132b")
+    t = SHAPES["train_4k"]
+    assert default_microbatches(small, t) <= default_microbatches(big, t)
+    assert default_microbatches(big, SHAPES["decode_32k"]) == 1
+    assert SHAPES["train_4k"].global_batch % \
+        default_microbatches(big, t) == 0
+
+
+# ---------------------------------------------------------------------------
+# dry-run artifacts (when present)
+# ---------------------------------------------------------------------------
+DRYRUN = "experiments/dryrun"
+
+
+@pytest.mark.skipif(not glob.glob(f"{DRYRUN}/*16x16.json"),
+                    reason="dry-run artifacts not generated yet")
+def test_dryrun_artifacts_complete_and_fit():
+    cells = {}
+    for f in glob.glob(f"{DRYRUN}/*__16x16.json"):
+        d = json.load(open(f))
+        cells[(d["arch"], d["shape"])] = d
+    # every finished (arch, shape) is ok or a documented design skip
+    for (arch, shape), d in cells.items():
+        assert d["status"] in ("ok", "skip"), (arch, shape, d.get("error"))
+        if d["status"] == "ok":
+            assert d["memory"]["peak_bytes"] < 16e9, (arch, shape)
+            r = d["roofline"]
+            assert r["hlo_flops"] > 0 and r["hlo_bytes"] > 0
+            assert r["bottleneck"] in ("compute", "memory", "collective")
+        else:
+            assert shape == "long_500k"
+
+
+def test_head_padding_resolution():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch).resolve_for_tp(16)
+        if any(k in ("attn", "local", "moe", "local_moe")
+               for k in cfg.layer_pattern):
+            assert cfg.eff_kv_heads % 16 == 0, arch
+            assert cfg.eff_heads % cfg.eff_kv_heads == 0, arch
+
+
+def test_weighted_costs_scan_probe():
+    """The trip-count-weighted accounting must be exact on a known scan:
+    10 iterations of a 512^3 matmul = 2*512^3*10 FLOPs (cost_analysis
+    reports the body only once — the bug this parser fixes)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.roofline import weighted_costs
+
+    def body(x, _):
+        return x @ x, None
+
+    def scanned(x):
+        return jax.lax.scan(body, x, None, length=10)[0]
+
+    x = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    c = jax.jit(scanned).lower(x).compile()
+    w = weighted_costs(c.as_text())
+    assert w.dot_flops == pytest.approx(2 * 512**3 * 10, rel=1e-6)
+    assert 10 in w.loops.values()
+    assert c.cost_analysis()["flops"] == pytest.approx(2 * 512**3, rel=1e-6)
+
+
+@pytest.mark.skipif(not glob.glob(f"{DRYRUN}/*16x16.json"),
+                    reason="dry-run artifacts not generated yet")
+def test_analytic_and_weighted_hlo_agree_on_compute():
+    """Two independent accountings of the compute term (closed-form vs
+    parsed dot-FLOPs x loop trips) must agree for train/prefill cells."""
+    import json
+    checked = 0
+    for f in glob.glob(f"{DRYRUN}/*__16x16.json"):
+        d = json.load(open(f))
+        if d["status"] != "ok" or "analytic" not in d:
+            continue
+        if d["shape"] not in ("train_4k", "prefill_32k"):
+            continue
+        an = d["analytic"]["flops_dev"]
+        hlo = d["roofline"]["hlo_flops"]
+        assert 0.35 < an / hlo < 2.5, (d["arch"], d["shape"], an, hlo)
+        checked += 1
+    assert checked >= 10

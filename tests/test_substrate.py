@@ -1,0 +1,209 @@
+"""Data pipeline, checkpointing, fault-tolerant training, serve engine."""
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (AsyncCheckpointer, available_steps,
+                              latest_step, restore, save)
+from repro.configs import get_config, smoke_config
+from repro.data import DataConfig, Prefetcher, SyntheticLM, data_config_for
+from repro.models import decode_step, forward, init, init_caches, prefill
+from repro.serve import ServeEngine
+from repro.train import TrainConfig, Trainer, run_with_restarts
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+def test_data_deterministic_and_seekable():
+    dc = DataConfig(vocab_size=128, seq_len=64, global_batch=8)
+    src = SyntheticLM(dc)
+    b5a = src.batch_at(5)
+    b5b = src.batch_at(5)
+    np.testing.assert_array_equal(b5a["tokens"], b5b["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b5a["tokens"][:, 1:], b5a["labels"][:, :-1])
+    assert b5a["tokens"].shape == (8, 64)
+
+
+def test_data_host_sharding_partitions_global_batch():
+    dc = DataConfig(vocab_size=128, seq_len=32, global_batch=8)
+    full = SyntheticLM(dc).batch_at(3)["tokens"]
+    shards = [SyntheticLM(dc, host_id=h, num_hosts=4).batch_at(3)["tokens"]
+              for h in range(4)]
+    assert all(s.shape == (2, 32) for s in shards)
+    # host shards are distinct streams (different rng per host)
+    assert not np.array_equal(shards[0], shards[1])
+    assert full.shape == (8, 32)
+
+
+def test_prefetcher_resumes_from_step():
+    dc = DataConfig(vocab_size=64, seq_len=16, global_batch=2)
+    src = SyntheticLM(dc)
+    pf = Prefetcher(src, start_step=7)
+    s, b = pf.next()
+    pf.close()
+    assert s == 7
+    np.testing.assert_array_equal(b["tokens"], src.batch_at(7)["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+def _tree(key=0):
+    k = jax.random.PRNGKey(key)
+    return {"a": jax.random.normal(k, (4, 8)),
+            "nest": {"b": jnp.arange(10, dtype=jnp.int32),
+                     "c": jnp.ones((3,), jnp.bfloat16)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 42, t, extra={"step": 42})
+    assert latest_step(str(tmp_path)) == 42
+    got, extra = restore(str(tmp_path), 42, jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t), verify=True)
+    assert extra["step"] == 42
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_atomicity_ignores_uncommitted(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 1, t)
+    # simulate a crash mid-write: step_2 exists but has no COMMIT
+    bad = tmp_path / "step_000000002"
+    bad.mkdir()
+    (bad / "manifest.json").write_text("{}")
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_checkpoint_gc_and_async(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3):
+        ck.save_async(s, _tree(s))
+    ck.wait()
+    assert available_steps(str(tmp_path)) == [2, 3]
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant training
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tiny_setup(tmp_path_factory):
+    cfg = smoke_config(get_config("qwen3-1.7b")).replace(n_layers=2)
+    dc = data_config_for(cfg, seq_len=32, global_batch=4)
+    return cfg, SyntheticLM(dc)
+
+
+def test_train_loop_runs_and_checkpoints(tiny_setup, tmp_path):
+    cfg, data = tiny_setup
+    tc = TrainConfig(steps=6, ckpt_every=3, ckpt_dir=str(tmp_path),
+                     log_every=100)
+    tr = Trainer(cfg, data, tc)
+    state = tr.run(tr.init_state())
+    assert state.step == 6
+    assert latest_step(str(tmp_path)) == 6
+    losses = [m["loss"] for m in tr.metrics]
+    assert all(np.isfinite(losses))
+
+
+def test_failure_injection_restores_and_resumes(tiny_setup, tmp_path):
+    cfg, data = tiny_setup
+    tc = TrainConfig(steps=8, ckpt_every=2, ckpt_dir=str(tmp_path),
+                     log_every=100)
+    boom = {"armed": True}
+
+    def failure_hook(step):
+        if step == 5 and boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("injected node failure")
+
+    tr = Trainer(cfg, data, tc, failure_hook=failure_hook)
+    state = run_with_restarts(tr, max_restarts=2)
+    assert state.step == 8
+    # the restart resumed from the last committed step (4), not scratch
+    steps_seen = [m["step"] for m in tr.metrics]
+    assert steps_seen.count(5) >= 1 and steps_seen[-1] == 8
+
+
+def test_restart_trajectory_bit_exact(tiny_setup, tmp_path):
+    """A restarted run must match an uninterrupted run exactly
+    (seekable data + deterministic step)."""
+    cfg, data = tiny_setup
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    tr1 = Trainer(cfg, data, TrainConfig(steps=6, ckpt_every=2, ckpt_dir=d1,
+                                         log_every=100))
+    s_full = tr1.run(tr1.init_state())
+    # run 2: stop at 4, then resume in a new Trainer to 6
+    tr2 = Trainer(cfg, data, TrainConfig(steps=6, ckpt_every=2, ckpt_dir=d2,
+                                         log_every=100))
+    tr2.run(tr2.init_state(), until=4)
+    tr2.ckpt.wait()
+    tr3 = Trainer(cfg, data, TrainConfig(steps=6, ckpt_every=2, ckpt_dir=d2,
+                                         log_every=100))
+    s_resumed = tr3.run(tr3.try_restore())
+    for a, b in zip(jax.tree.leaves(s_full.params),
+                    jax.tree.leaves(s_resumed.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=1e-6)
+
+
+def test_straggler_watchdog():
+    from repro.train.loop import StragglerWatchdog
+    wd = StragglerWatchdog(factor=3.0)
+    flags = [wd.observe(i, dt) for i, dt in
+             enumerate([1.0, 1.0, 1.0, 10.0, 1.0])]
+    assert flags == [False, False, False, True, False]
+    assert wd.flagged == [3]
+
+
+# ---------------------------------------------------------------------------
+# serve engine (continuous batching)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "zamba2-1.2b"])
+def test_engine_matches_direct_generation(arch):
+    cfg = smoke_config(get_config(arch))
+    params = init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (7, 12, 5)]
+    new = 4
+
+    # oracle: sequential greedy via forward() re-run per token
+    def greedy(prompt):
+        toks = list(prompt)
+        for _ in range(new):
+            logits, _ = forward(params,
+                                {"tokens": jnp.asarray([toks])}, cfg)
+            toks.append(int(jnp.argmax(logits[0, -1])))
+        return toks[len(prompt):]
+
+    want = [greedy(p) for p in prompts]
+
+    eng = ServeEngine(params, cfg, max_batch=2, max_len=64)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=new)
+    done = eng.run()
+    assert len(done) == 3
+    for rid, exp in enumerate(want):
+        assert done[rid].generated == exp, (rid, done[rid].generated, exp)
+
+
+def test_engine_interleaves_different_lengths():
+    cfg = smoke_config(get_config("h2o-danube-1.8b"))
+    params = init(cfg, jax.random.PRNGKey(1))
+    eng = ServeEngine(params, cfg, max_batch=2, max_len=64)
+    eng.submit(np.arange(5, dtype=np.int32) % cfg.vocab_size,
+               max_new_tokens=8)
+    eng.submit(np.arange(11, dtype=np.int32) % cfg.vocab_size,
+               max_new_tokens=2)
+    eng.submit(np.arange(3, dtype=np.int32) % cfg.vocab_size,
+               max_new_tokens=5)
+    done = eng.run()
+    assert sorted(done) == [0, 1, 2]
+    assert [len(done[r].generated) for r in (0, 1, 2)] == [8, 2, 5]

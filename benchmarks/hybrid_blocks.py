@@ -1,0 +1,73 @@
+"""Hybrid partitioned SpMV: block-size / strategy sweep over skewed matrices.
+
+The whole-matrix tuner falls back to CRS on anything with a heavy row tail
+(the paper's torso1 ELL overflow).  This sweep shows the per-row-block
+tuner recovering the ELL win on the regular blocks: for each matrix it
+times whole-matrix CSR SpMV against the hybrid operator under several
+partitioning strategies and block sizes, and reports the per-block format
+mix and the build (transformation) cost alongside.
+
+    PYTHONPATH=src python -m benchmarks.run --only hybrid
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spmv
+from repro.core.autotune import time_fn
+from repro.core.suite import TABLE1, synthesize, synthesize_power_law
+from repro.partition import build_hybrid, spmv_hybrid
+
+from .common import ITERS, Row, SCALE
+
+
+SWEEP = (
+    ("fixed_256", "fixed", {"block_rows": 256}),
+    ("fixed_1024", "fixed", {"block_rows": 1024}),
+    ("balanced_8", "balanced_nnz", {"n_blocks": 8}),
+    ("variance_16", "variance", {"max_blocks": 16, "min_rows": 64}),
+)
+
+
+def _bench_matrix(name: str, csr, iters: int) -> List[Row]:
+    x = jnp.ones((csr.n_cols,), jnp.float32)
+    jit_csr = jax.jit(spmv)
+    t_csr = time_fn(jit_csr, csr, x, iters=iters)
+    rows = [Row(name=f"hybrid/{name}/csr", us_per_call=t_csr * 1e6,
+                derived={"n": csr.n_rows, "nnz": csr.nnz})]
+    for label, strategy, kw in SWEEP:
+        hyb, rep = build_hybrid(csr, strategy=strategy, **kw)
+        jit_h = jax.jit(spmv_hybrid)
+        t_h = time_fn(jit_h, hyb, x, iters=iters)
+        fmts = ";".join(f"{k}:{v}" for k, v in
+                        sorted(rep.format_counts().items()))
+        rows.append(Row(
+            name=f"hybrid/{name}/{label}", us_per_call=t_h * 1e6,
+            derived={"blocks": rep.n_blocks, "formats": fmts,
+                     "speedup_vs_csr": f"{t_csr / t_h:.2f}",
+                     "t_build_ms": f"{(rep.t_partition + rep.t_transform) * 1e3:.1f}"}))
+    return rows
+
+
+def run(scale: float = SCALE, iters: int = ITERS) -> List[Row]:
+    rows: List[Row] = []
+    # skew sweep: power-law tails of increasing heaviness
+    for alpha, n in ((3.0, 8192), (2.0, 8192), (1.3, 8192)):
+        rows.extend(_bench_matrix(f"powerlaw_a{alpha}",
+                                  synthesize_power_law(n=n, alpha=alpha),
+                                  iters))
+    # the paper's pathological cases, synthesized at benchmark scale
+    for mname in ("memplus", "torso1"):
+        spec = [s for s in TABLE1 if s.name == mname][0]
+        rows.extend(_bench_matrix(mname, synthesize(spec, scale=scale),
+                                  iters))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import print_rows
+    print_rows(run())

@@ -26,7 +26,13 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+    HAVE_ZSTD = True
+except ImportError:          # optional: fall back to uncompressed leaves
+    zstd = None
+    HAVE_ZSTD = False
 
 
 def _leaf_paths(tree: Any) -> Tuple[List[Tuple[str, Any]], Any]:
@@ -48,18 +54,19 @@ def save(directory: str, step: int, tree: Any,
     os.makedirs(tmp, exist_ok=True)
 
     flat, _ = _leaf_paths(tree)
-    cctx = zstd.ZstdCompressor(level=3)
+    cctx = zstd.ZstdCompressor(level=3) if HAVE_ZSTD else None
+    codec = "zstd" if HAVE_ZSTD else "none"
     manifest: Dict[str, Any] = {"step": step, "extra": extra or {},
                                 "leaves": []}
     for i, (key, leaf) in enumerate(flat):
         arr = np.asarray(jax.device_get(leaf))
         raw = arr.tobytes()
-        fname = f"leaf_{i:05d}.bin.zst"
+        fname = f"leaf_{i:05d}.bin.zst" if HAVE_ZSTD else f"leaf_{i:05d}.bin"
         with open(os.path.join(tmp, fname), "wb") as f:
-            f.write(cctx.compress(raw))
+            f.write(cctx.compress(raw) if cctx else raw)
         manifest["leaves"].append({
             "key": key, "file": fname, "shape": list(arr.shape),
-            "dtype": str(arr.dtype),
+            "dtype": str(arr.dtype), "codec": codec,
             "sha256": hashlib.sha256(raw).hexdigest(),
         })
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -101,12 +108,19 @@ def restore(directory: str, step: int, target_tree: Any,
     by_key = {m["key"]: m for m in manifest["leaves"]}
     shard_flat = (jax.tree_util.tree_leaves(shardings)
                   if shardings is not None else [None] * len(flat_t))
-    dctx = zstd.ZstdDecompressor()
+    dctx = zstd.ZstdDecompressor() if HAVE_ZSTD else None
     leaves = []
     for (key, tgt), sh in zip(flat_t, shard_flat):
         m = by_key[key]
+        codec = m.get("codec", "zstd")  # pre-codec manifests were all zstd
         with open(os.path.join(path, m["file"]), "rb") as f:
-            raw = dctx.decompress(f.read())
+            raw = f.read()
+        if codec == "zstd":
+            if dctx is None:
+                raise RuntimeError(
+                    f"checkpoint leaf {key} is zstd-compressed but the "
+                    "zstandard package is not installed")
+            raw = dctx.decompress(raw)
         if verify:
             assert hashlib.sha256(raw).hexdigest() == m["sha256"], key
         arr = np.frombuffer(raw, dtype=np.dtype(m["dtype"])).reshape(

@@ -42,7 +42,8 @@ from .formats import CSR, MatrixStats, memory_bytes
 from .spmv import spmv
 from .transform import TRANSFORMS_HOST
 
-DEFAULT_FORMATS = ("ell_row", "ell_col", "coo_row", "coo_col", "sell")
+DEFAULT_FORMATS = ("ell_row", "ell_col", "coo_row", "coo_col", "sell",
+                   "hybrid")
 
 
 # ---------------------------------------------------------------------------
@@ -285,6 +286,11 @@ class MachineModel:
             stream = padded * (self.val_bytes + self.idx_bytes)
             gather = padded * self.val_bytes
             return stream / self.stream_bw + gather / self.gather_bw
+        if fmt == "hybrid":
+            # per-block tuning keeps regular blocks at SELL-like width ~mu
+            # and drops the heavy tail into CSR/COO; model as SELL plus a
+            # small per-block dispatch/reassembly overhead
+            return 1.05 * self.t_spmv("sell", stats)
         raise KeyError(fmt)
 
     def t_trans(self, fmt: str, stats: MatrixStats) -> float:

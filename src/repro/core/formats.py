@@ -261,7 +261,8 @@ def memory_bytes(fmt) -> int:
     return total
 
 
-FORMAT_NAMES = ("csr", "coo_row", "coo_col", "ell_row", "ell_col", "sell")
+FORMAT_NAMES = ("csr", "coo_row", "coo_col", "ell_row", "ell_col", "sell",
+                "hybrid")
 
 __all__ = [
     "CSR", "CCS", "COO", "ELL", "BucketedELL", "MatrixStats",

@@ -33,6 +33,12 @@ class MemoryPolicy:
             # sigma-sort removes inter-slice padding: ~ nnz rounded up
             w = pad_to_multiple(max(int(stats.mu + stats.sigma), 1), 8)
             return n * w * (val_bytes + idx_bytes) + n * idx_bytes
+        if fmt == "hybrid":
+            # each block independently passes this policy against its own
+            # CSR footprint, and CSR is always a candidate, so the whole
+            # matrix is bounded by ~CSR plus per-block indptr/perm overhead
+            csr = nnz * (val_bytes + idx_bytes) + (n + 1) * idx_bytes
+            return int(1.05 * csr) + n * idx_bytes
         raise KeyError(fmt)
 
     def allowed(self, formats: Sequence[str], csr: CSR) -> Dict[str, bool]:

@@ -99,6 +99,9 @@ def spmv_sell(m: BucketedELL, x: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 def spmv(m, x: jax.Array) -> jax.Array:
     from .formats import BCSR
+    from repro.partition import HybridMatrix, spmv_hybrid  # lazy: no cycle
+    if isinstance(m, HybridMatrix):
+        return spmv_hybrid(m, x)
     if isinstance(m, BCSR):
         return spmv_bcsr(m, x)
     if isinstance(m, CSR):

@@ -188,6 +188,25 @@ def paper_suite(scale: float = 1.0, seed: int = 0,
     return out
 
 
+def synthesize_power_law(n: int = 8192, mu: float = 8.0, alpha: float = 2.0,
+                         seed: int = 0, random_values: bool = False) -> CSR:
+    """Beyond Table 1: Zipf-ish row lengths (most rows short, a few huge) —
+    the heavy-tail structure that stalls whole-matrix ELL via max_row
+    padding, used by the partition subsystem's benchmarks and tests."""
+    rng = np.random.default_rng(seed)
+    lens = np.minimum((rng.pareto(alpha, size=n) + 1) * mu / 2, n // 2)
+    lens = np.maximum(lens.astype(np.int64), 1)
+    row_cols: List[np.ndarray] = []
+    row_vals: List[np.ndarray] = []
+    for i in range(n):
+        L = int(lens[i])
+        start = min(max(i - L // 2, 0), n - L)
+        row_cols.append(np.arange(start, start + L, dtype=np.int32))
+        row_vals.append(rng.normal(size=L).astype(np.float32)
+                        if random_values else np.full(L, 1.0, np.float32))
+    return csr_from_rows(row_cols, row_vals, n_cols=n, pad=8)
+
+
 def verify_suite(scale: float = 1.0, rtol: float = 0.25) -> List[str]:
     """Return a list of mismatch messages (empty = all stats reproduced)."""
     msgs = []
@@ -200,4 +219,5 @@ def verify_suite(scale: float = 1.0, rtol: float = 0.25) -> List[str]:
     return msgs
 
 
-__all__ = ["MatrixSpec", "TABLE1", "synthesize", "paper_suite", "verify_suite"]
+__all__ = ["MatrixSpec", "TABLE1", "synthesize", "synthesize_power_law",
+           "paper_suite", "verify_suite"]

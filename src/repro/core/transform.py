@@ -284,8 +284,15 @@ def device_csr_to_ccs(m: CSR) -> CCS:
                shape=m.shape, nnz=m.nnz)
 
 
+def _host_csr_to_hybrid(m: CSR, **kw):
+    # lazy import: repro.partition imports this module at load time
+    from repro.partition import host_csr_to_hybrid
+    return host_csr_to_hybrid(m, **kw)
+
+
 TRANSFORMS_HOST = {
     "bcsr": lambda m: host_csr_to_bcsr(m),
+    "hybrid": _host_csr_to_hybrid,
     "coo_row": host_csr_to_coo_row,
     "coo_col": host_csr_to_coo_col,
     "ell_row": lambda m: host_csr_to_ell(m, order="row"),

@@ -155,6 +155,16 @@ def spmv_sell(m: BucketedELL, x: jax.Array,
     return y
 
 
+def spmv_hybrid(m, x: jax.Array,
+                interpret: Optional[bool] = None) -> jax.Array:
+    """Partitioned hybrid matrix: each row block through its own format's
+    Pallas kernel (reassembly lives in the partition subsystem)."""
+    from repro.partition import spmv_hybrid as _dispatch
+    impls = {f: functools.partial(impl, interpret=interpret)
+             for f, impl in KERNEL_SPMV_IMPLS.items() if f != "hybrid"}
+    return _dispatch(m, x, impls=impls)
+
+
 KERNEL_SPMV_IMPLS = {
     "csr": spmv_csr,
     "coo_row": spmv_coo,
@@ -162,8 +172,9 @@ KERNEL_SPMV_IMPLS = {
     "ell_row": spmv_ell,
     "ell_col": spmv_ell,
     "sell": spmv_sell,
+    "hybrid": spmv_hybrid,
 }
 
 __all__ = ["ell_spmv_raw", "ell_spmm_raw", "coo_spmv_raw", "ell_spmv_ad",
-           "spmv_ell", "spmv_coo", "spmv_csr", "spmv_sell",
+           "spmv_ell", "spmv_coo", "spmv_csr", "spmv_sell", "spmv_hybrid",
            "KERNEL_SPMV_IMPLS"]

@@ -142,7 +142,10 @@ def _dot_flops(body: str, table: Dict[str, Tuple[str, List[int]]]) -> float:
         out_n = 1
         for d in out_dims:
             out_n *= d
-        ops = re.search(r"dot\(%([\w.\-]+),\s*%([\w.\-]+)\)", s)
+        # operands may carry a type prefix ("dot(f32[512,512]{1,0} %a, ...)")
+        ops = re.search(
+            r"dot\((?:[^%()]*\s)?%([\w.\-]+),\s*(?:[^%()]*\s)?%([\w.\-]+)\)",
+            s)
         if not ops:
             continue
         lhs = table.get(ops.group(1))

@@ -1,0 +1,142 @@
+"""Row-block partitioning strategies for the hybrid-format subsystem.
+
+The paper's auto-tuner makes one whole-matrix decision from D_mat = sigma/mu,
+so a single skewed row stalls ELL for the entire matrix (max_row padding).
+Splitting into row blocks and deciding per block (adaptive row-grouped CSR,
+Heller & Oberhuber; shared-memory partitioned SpMV, Bergmans et al.) keeps
+the per-block D_mat low where the matrix is regular and isolates the heavy
+tail into blocks that fall back to CRS/COO on their own.
+
+Every strategy maps a row-length vector to *boundaries*: a strictly
+increasing int64 array ``[0, b_1, ..., n_rows]``.  Block i covers permuted
+rows ``boundaries[i]:boundaries[i+1]``.  Strategies operate on the (possibly
+length-sorted) row space; sorting is the caller's choice (``build_hybrid``).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import numpy as np
+
+
+def _as_lens(row_lens) -> np.ndarray:
+    lens = np.asarray(row_lens, dtype=np.int64)
+    if lens.ndim != 1:
+        raise ValueError(f"row_lens must be 1-D, got shape {lens.shape}")
+    return lens
+
+
+def _validate(boundaries: np.ndarray, n: int) -> np.ndarray:
+    b = np.asarray(boundaries, dtype=np.int64)
+    assert b[0] == 0 and b[-1] == n and np.all(np.diff(b) > 0), b
+    return b
+
+
+# ---------------------------------------------------------------------------
+# fixed-size blocks
+# ---------------------------------------------------------------------------
+def partition_fixed(row_lens, block_rows: int = 1024) -> np.ndarray:
+    """Uniform blocks of ``block_rows`` rows (last block may be short)."""
+    n = _as_lens(row_lens).shape[0]
+    block_rows = max(int(block_rows), 1)
+    b = np.arange(0, n, block_rows, dtype=np.int64)
+    return _validate(np.append(b, n), n)
+
+
+# ---------------------------------------------------------------------------
+# nnz-balanced blocks
+# ---------------------------------------------------------------------------
+def partition_balanced_nnz(row_lens, n_blocks: int = 8) -> np.ndarray:
+    """~Equal nonzeros per block: cut the nnz prefix sum at k/n_blocks.
+
+    This is the load-balancing split of partitioned SpMV — each block does
+    the same work even when row lengths are wildly skewed."""
+    lens = _as_lens(row_lens)
+    n = lens.shape[0]
+    n_blocks = int(np.clip(n_blocks, 1, n))
+    csum = np.cumsum(lens)
+    total = csum[-1] if csum.size else 0
+    if total == 0:
+        return partition_fixed(lens, max(n // n_blocks, 1))
+    targets = total * np.arange(1, n_blocks, dtype=np.float64) / n_blocks
+    cuts = np.searchsorted(csum, targets, side="left") + 1
+    b = np.concatenate([[0], np.unique(np.clip(cuts, 1, n - 1)), [n]]) \
+        if n > 1 else np.array([0, n])
+    return _validate(np.unique(b), n)
+
+
+# ---------------------------------------------------------------------------
+# greedy variance splitting
+# ---------------------------------------------------------------------------
+def _best_split(lens: np.ndarray, s: int, e: int):
+    """Best single cut of segment [s, e) by within-segment SSE reduction.
+
+    Prefix sums give the SSE of every (left, right) pair in O(e - s):
+      SSE(a, b) = sum(l^2) - sum(l)^2 / (b - a).
+    Returns (cut, gain) with gain = SSE(s,e) - SSE(s,cut) - SSE(cut,e).
+    """
+    seg = lens[s:e].astype(np.float64)
+    m = seg.shape[0]
+    if m < 2:
+        return None, 0.0
+    c1 = np.cumsum(seg)
+    c2 = np.cumsum(seg * seg)
+    k = np.arange(1, m, dtype=np.float64)          # left sizes
+    sse_l = c2[:-1] - c1[:-1] ** 2 / k
+    sse_r = (c2[-1] - c2[:-1]) - (c1[-1] - c1[:-1]) ** 2 / (m - k)
+    sse_all = c2[-1] - c1[-1] ** 2 / m
+    gains = sse_all - (sse_l + sse_r)
+    i = int(np.argmax(gains))
+    return s + i + 1, float(gains[i])
+
+
+def partition_variance(row_lens, max_blocks: int = 16, min_rows: int = 64,
+                       min_gain: float = 1.0) -> np.ndarray:
+    """Greedy recursive splitting that minimizes within-block row-length
+    variance — the per-block analogue of driving D_mat toward zero.
+
+    Repeatedly cut the segment whose best split yields the largest SSE
+    reduction, until ``max_blocks`` segments exist, no split clears
+    ``min_gain``, or segments would drop under ``min_rows`` rows.  On a
+    length-sorted row space this isolates the heavy tail into its own
+    block(s) and leaves near-uniform blocks elsewhere.
+    """
+    lens = _as_lens(row_lens)
+    n = lens.shape[0]
+    if n == 0:
+        raise ValueError("cannot partition an empty matrix")
+    segments = [(0, n)]
+    while len(segments) < max_blocks:
+        best = None  # (gain, seg_idx, cut)
+        for si, (s, e) in enumerate(segments):
+            if e - s < 2 * min_rows:
+                continue
+            cut, gain = _best_split(lens, s, e)
+            if cut is None or cut - s < min_rows or e - cut < min_rows:
+                # clamp the cut into the feasible band and re-score
+                cut = int(np.clip(cut or s + min_rows, s + min_rows,
+                                  e - min_rows))
+                seg = lens[s:e].astype(np.float64)
+                k = cut - s
+                sse = lambda v: float(np.sum(v * v) - v.sum() ** 2 / len(v))
+                gain = sse(seg) - sse(seg[:k]) - sse(seg[k:])
+            if gain > min_gain and (best is None or gain > best[0]):
+                best = (gain, si, cut)
+        if best is None:
+            break
+        _, si, cut = best
+        s, e = segments[si]
+        segments[si:si + 1] = [(s, cut), (cut, e)]
+    boundaries = np.array(sorted({s for s, _ in segments} | {n}),
+                          dtype=np.int64)
+    return _validate(boundaries, n)
+
+
+PARTITIONERS: Dict[str, Callable[..., np.ndarray]] = {
+    "fixed": partition_fixed,
+    "balanced_nnz": partition_balanced_nnz,
+    "variance": partition_variance,
+}
+
+__all__ = ["partition_fixed", "partition_balanced_nnz", "partition_variance",
+           "PARTITIONERS"]

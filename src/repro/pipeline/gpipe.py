@@ -35,9 +35,13 @@ def pipeline_forward(stage_params: Any, x_micro: jax.Array, *,
         params1 = jax.tree.map(lambda a: a[0], params_local)
         stage = jax.lax.axis_index(axis)
         ticks = M + n_stages - 1
-        # mark carries as device-varying over the pipe axis (shard_map vma)
-        buf = jax.lax.pcast(jnp.zeros_like(xs[0]), (axis,), to="varying")
-        outs = jax.lax.pcast(jnp.zeros_like(xs), (axis,), to="varying")
+        # mark carries as device-varying over the pipe axis (shard_map vma;
+        # jax < 0.5 has no pcast and no vma tracking — replication is fine)
+        pcast = getattr(jax.lax, "pcast", None)
+        vary = (lambda v: pcast(v, (axis,), to="varying")) if pcast \
+            else (lambda v: v)
+        buf = vary(jnp.zeros_like(xs[0]))
+        outs = vary(jnp.zeros_like(xs))
 
         def tick(t, carry):
             buf, outs = carry

@@ -1,1 +1,2 @@
 from .engine import Request, ServeEngine
+from .spmv_service import MatrixEntry, SpMVService

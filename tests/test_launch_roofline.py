@@ -142,7 +142,10 @@ def test_weighted_costs_scan_probe():
     w = weighted_costs(c.as_text())
     assert w.dot_flops == pytest.approx(2 * 512**3 * 10, rel=1e-6)
     assert 10 in w.loops.values()
-    assert c.cost_analysis()["flops"] == pytest.approx(2 * 512**3, rel=1e-6)
+    cost = c.cost_analysis()
+    if isinstance(cost, list):   # some jax versions return [dict]
+        cost = cost[0]
+    assert cost["flops"] == pytest.approx(2 * 512**3, rel=1e-6)
 
 
 @pytest.mark.skipif(not glob.glob(f"{DRYRUN}/*16x16.json"),

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
 SCALE = 0.08          # suite scale for CPU wall-clock runs (stats invariant)
 ITERS = 3

@@ -15,7 +15,6 @@ from typing import List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import spmv
 from repro.core.autotune import time_fn

@@ -11,7 +11,6 @@ from typing import List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import MatrixStats, host_csr_to_ell, spmv, time_fn
 from repro.core.suite import paper_suite

@@ -16,7 +16,7 @@ from repro.configs import get_config, smoke_config
 from repro.core import time_fn
 from repro.models import init
 from repro.models.moe import (dispatch_d_mat, learn_d_star, moe_csr,
-                              moe_ell, route)
+                              moe_ell)
 
 from .common import Row
 

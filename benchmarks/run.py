@@ -12,8 +12,8 @@ import time
 from .common import print_rows
 
 
-SECTIONS = ("table1", "fig56", "fig7", "fig8", "hybrid", "moe", "kernels",
-            "roofline")
+SECTIONS = ("table1", "fig56", "fig7", "fig8", "hybrid", "spmm_batch",
+            "moe", "kernels", "roofline")
 
 
 def main() -> None:
@@ -36,13 +36,14 @@ def main() -> None:
         print(f"# {name}: {time.time()-t:.1f}s", file=sys.stderr)
 
     from . import (fig56_speedup, fig7_overhead, fig8_graph, hybrid_blocks,
-                   kernels_bench, moe_dispatch, roofline, table1)
+                   kernels_bench, moe_dispatch, roofline, spmm_batch, table1)
     scale_kw = {"scale": args.scale} if args.scale else {}
     section("table1", table1.run, **scale_kw)
     section("fig56", fig56_speedup.run, **scale_kw)
     section("fig7", fig7_overhead.run, **scale_kw)
     section("fig8", fig8_graph.run, **scale_kw)
     section("hybrid", hybrid_blocks.run, **scale_kw)
+    section("spmm_batch", spmm_batch.run, **scale_kw)
     section("moe", moe_dispatch.run)
     section("kernels", kernels_bench.run)
     section("roofline", roofline.run)

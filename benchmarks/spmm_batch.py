@@ -1,0 +1,88 @@
+"""Batched SpMM vs a per-vector SpMV loop, across B and formats.
+
+The paper's amortization rule ``k (t_crs - t_f) > t_trans`` strengthens to
+``k * B * (t_crs - t_f) > t_trans`` when each call carries B right-hand
+sides — but only if SpMM actually beats B back-to-back SpMVs.  This sweep
+measures exactly that ratio on the pathological suite (memplus, torso1 —
+the matrices whose heavy tails break whole-matrix ELL), per format and
+batch width:
+
+    speedup(B) = B * t_spmv / t_spmm(B)
+
+JSON output (``--json``) is uploaded as a CI artifact so the ratio is
+tracked per commit.
+
+    PYTHONPATH=src python -m benchmarks.run --only spmm_batch
+    PYTHONPATH=src python -m benchmarks.spmm_batch --json out.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spmm, spmv
+from repro.core.autotune import time_fn
+from repro.core.suite import TABLE1, synthesize
+from repro.core.transform import TRANSFORMS_HOST
+
+from .common import ITERS, Row, SCALE
+
+BATCHES = (1, 8, 32, 128)
+FORMATS = ("csr", "sell", "hybrid")
+MATRICES = ("memplus", "torso1")
+
+
+def _bench_matrix(name: str, csr, batches, formats, iters: int) -> List[Row]:
+    rows: List[Row] = []
+    jit_spmv = jax.jit(spmv)
+    jit_spmm = jax.jit(spmm)
+    for fmt in formats:
+        obj = TRANSFORMS_HOST[fmt](csr)
+        x = jnp.ones((csr.n_cols,), jnp.float32)
+        t_vec = time_fn(jit_spmv, obj, x, iters=iters)
+        for b in batches:
+            X = jnp.ones((csr.n_cols, b), jnp.float32)
+            t_mm = time_fn(jit_spmm, obj, X, iters=iters)
+            # the "loop" baseline: B independent single-vector calls
+            t_loop = b * t_vec
+            rows.append(Row(
+                name=f"spmm_batch/{name}/{fmt}/B{b}",
+                us_per_call=t_mm * 1e6,
+                derived={"n": csr.n_rows, "nnz": csr.nnz, "batch": b,
+                         "us_spmv_loop": f"{t_loop * 1e6:.2f}",
+                         "speedup_vs_loop": f"{t_loop / t_mm:.2f}"}))
+    return rows
+
+
+def run(scale: float = SCALE, iters: int = ITERS,
+        batches=BATCHES, formats=FORMATS) -> List[Row]:
+    rows: List[Row] = []
+    for mname in MATRICES:
+        spec = [s for s in TABLE1 if s.name == mname][0]
+        csr = synthesize(spec, scale=scale)
+        rows.extend(_bench_matrix(mname, csr, batches, formats, iters))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=SCALE)
+    ap.add_argument("--iters", type=int, default=ITERS)
+    ap.add_argument("--json", default=None,
+                    help="also write results as JSON (CI artifact)")
+    args = ap.parse_args()
+    rows = run(scale=args.scale, iters=args.iters)
+    from .common import print_rows
+    print_rows(rows)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([{"name": r.name, "us_per_call": r.us_per_call,
+                        **r.derived} for r in rows], f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

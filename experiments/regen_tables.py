@@ -1,6 +1,6 @@
 """Regenerate the §Roofline tables inside EXPERIMENTS.md from the dry-run
 artifacts (run after any dry-run refresh)."""
-import json, glob, re, sys
+import json, glob, re
 
 def single_pod_table():
     lines = ["| arch | shape | bneck | An.comp | An.mem | An.coll | wHLO.comp | wHLO.coll | RF(TPU) | peak GB |",

@@ -20,7 +20,7 @@ Block kinds:
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import jax.numpy as jnp

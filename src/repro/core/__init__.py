@@ -8,8 +8,10 @@ from .transform import (csr_from_dense, csr_from_rows, device_csr_to_ccs,
                         host_csr_to_ccs_paper, host_csr_to_coo_col,
                         host_csr_to_coo_row, host_csr_to_ell,
                         host_csr_to_sell, TRANSFORMS_HOST)
-from .spmv import (spmv, spmv_ccs, spmv_coo, spmv_csr, spmv_dense, spmv_ell,
-                   spmv_sell, spmm_csr, spmm_ell)
+from . import dispatch
+from .spmv import (spmm, spmv, spmv_bcsr, spmv_ccs, spmv_coo, spmv_csr,
+                   spmv_dense, spmv_ell, spmv_sell, spmm_bcsr, spmm_ccs,
+                   spmm_coo, spmm_csr, spmm_ell, spmm_sell)
 from .autotune import (AutoTunedSpMV, Decision, MachineModel, TuningDB,
                        decide_cost_model, decide_generalized, decide_paper,
                        offline_phase, time_fn)

@@ -39,7 +39,7 @@ import jax
 import numpy as np
 
 from .formats import CSR, MatrixStats, memory_bytes
-from .spmv import spmv
+from .spmv import spmm, spmv
 from .transform import TRANSFORMS_HOST
 
 DEFAULT_FORMATS = ("ell_row", "ell_col", "coo_row", "coo_col", "sell",
@@ -94,6 +94,7 @@ class OfflineRecord:
     sigma: float
     d_mat: float
     t_crs: float
+    batch: int = 1     # right-hand sides per timed call (1 = SpMV, B = SpMM)
     formats: Dict[str, FormatMeasurement] = field(default_factory=dict)
 
 
@@ -143,18 +144,39 @@ class TuningDB:
                if fmt in r.formats]
         return sorted(pts)
 
-    def predict(self, fmt: str, d_mat: float) -> Dict[str, float]:
+    def predict(self, fmt: str, d_mat: float,
+                batch: Optional[int] = None) -> Dict[str, float]:
         """Nearest-neighbours (in log D) prediction of (sp, tt) for a new
-        matrix — the generalized on-line model."""
+        matrix — the generalized on-line model.
+
+        ``batch``: prefer records measured at the same RHS count (SpMM
+        measurements).  When none exist, fall back to all records and
+        rescale each record's ``tt`` from its own measured batch to the
+        queried one (``tt`` is relative to one t_crs *call*, so a call B
+        products wide carries t_trans / B per unit batch); the result is
+        reported with ``batch_matched=False`` but its ``tt`` is already in
+        per-``batch``-call units either way."""
         recs = [r for r in self.records if fmt in r.formats]
+        matched = True
+        if batch is not None and recs:
+            exact = [r for r in recs if r.batch == batch]
+            matched = bool(exact)
+            recs = exact or recs
         if not recs:
-            return {"sp": 1.0, "tt": float("inf")}
+            return {"sp": 1.0, "tt": float("inf"), "batch_matched": False}
+
+        def tt_of(r: OfflineRecord) -> float:
+            tt = r.formats[fmt].tt
+            if batch is not None and not matched:
+                tt *= r.batch / max(batch, 1)
+            return tt
+
         d = np.array([max(r.d_mat, 1e-9) for r in recs])
         w = 1.0 / (1e-9 + np.abs(np.log(d) - np.log(max(d_mat, 1e-9))))
         w /= w.sum()
         sp = float(sum(wi * r.formats[fmt].sp for wi, r in zip(w, recs)))
-        tt = float(sum(wi * r.formats[fmt].tt for wi, r in zip(w, recs)))
-        return {"sp": sp, "tt": tt}
+        tt = float(sum(wi * tt_of(r) for wi, r in zip(w, recs)))
+        return {"sp": sp, "tt": tt, "batch_matched": matched}
 
 
 # ---------------------------------------------------------------------------
@@ -168,31 +190,53 @@ def offline_phase(
     spmv_impls: Optional[Dict[str, Callable]] = None,
     iters: int = 5,
     make_x: Optional[Callable[[CSR], jax.Array]] = None,
+    batch: int = 1,
+    spmm_impls: Optional[Dict[str, Callable]] = None,
 ) -> TuningDB:
     """Measure the suite, build the D_mat–R graph, learn D* per format.
 
     ``spmv_impls`` maps format name -> callable(fmt_obj, x); defaults to the
     pure-jnp references (the Pallas kernels are plugged in by the caller —
     e.g. benchmarks pass ``repro.kernels.ops`` wrappers).
+
+    ``batch``: number of right-hand sides per timed call.  ``batch > 1``
+    times the SpMM path with an ``(n_cols, batch)`` panel instead of SpMV,
+    so the resulting D_mat–R graph (and the D* thresholds learned from it)
+    reflect that one transformation is amortized over ``k * batch``
+    products.  Records carry the batch they were measured at.  With
+    ``batch > 1`` overrides come from ``spmm_impls`` (callables taking the
+    panel); ``spmv_impls`` is SpMV-only and is ignored then.
     """
     import jax.numpy as jnp
 
+    batch = max(int(batch), 1)
+    if batch > 1 and spmv_impls and not spmm_impls:
+        raise ValueError(
+            "offline_phase(batch > 1) times the SpMM path; pass the panel "
+            "callables via spmm_impls (spmv_impls is SpMV-only)")
+    default_op = spmv if batch == 1 else spmm
+    impls = (spmv_impls if batch == 1 else spmm_impls) or {}
     records: List[OfflineRecord] = []
     for name, csr in suite:
         stats = MatrixStats.of(csr)
-        x = (make_x(csr) if make_x is not None
-             else jnp.ones((csr.n_cols,), jnp.float32))
-        csr_fn = (spmv_impls or {}).get("csr", spmv)
+        if make_x is not None:
+            x = make_x(csr)
+        elif batch == 1:
+            x = jnp.ones((csr.n_cols,), jnp.float32)
+        else:
+            x = jnp.ones((csr.n_cols, batch), jnp.float32)
+        csr_fn = impls.get("csr", default_op)
         jit_csr = jax.jit(lambda m, v, fn=csr_fn: fn(m, v))
         t_crs = time_fn(jit_csr, csr, x, iters=iters)
         rec = OfflineRecord(name=name, n=stats.n, nnz=stats.nnz, mu=stats.mu,
-                            sigma=stats.sigma, d_mat=stats.d_mat, t_crs=t_crs)
+                            sigma=stats.sigma, d_mat=stats.d_mat,
+                            t_crs=t_crs, batch=batch)
         base_mem = memory_bytes(csr)
         for f in formats:
             trans = TRANSFORMS_HOST[f]
             t_trans = time_host(trans, csr)
             fmt_obj = trans(csr)
-            f_fn = (spmv_impls or {}).get(f, spmv)
+            f_fn = impls.get(f, default_op)
             jit_f = jax.jit(lambda m, v, fn=f_fn: fn(m, v))
             t_f = time_fn(jit_f, fmt_obj, x, iters=iters)
             sp = t_crs / t_f
@@ -234,14 +278,22 @@ def decide_paper(db: TuningDB, stats: MatrixStats, fmt: str = "ell_row") -> Deci
 def decide_generalized(db: TuningDB, stats: MatrixStats,
                        expected_iterations: int = 100,
                        formats: Optional[Sequence[str]] = None,
-                       memory_budget_ratio: float = float("inf")) -> Decision:
+                       memory_budget_ratio: float = float("inf"),
+                       batch: int = 1) -> Decision:
     """Beyond-paper: pick argmin over formats of predicted total time for k
     iterations, k*t_f + t_trans_f, subject to a memory budget (paper §2.2's
-    'auto-tuning policy' drawback)."""
+    'auto-tuning policy' drawback).
+
+    ``batch``: right-hand sides per call.  Each call carries B products, so
+    a transformation paid once is amortized over ``k * B`` of them — the
+    rule becomes ``k * B * (t_crs - t_f) > t_trans``.  ``predict`` hands
+    back tt already rescaled to per-B-call units (preferring records
+    measured at this batch, else rescaling by each record's own batch)."""
     k = max(expected_iterations, 1)
-    best_fmt, best_cost, best_ds = "csr", float(k), 0.0  # unit: t_crs
+    b = max(batch, 1)
+    best_fmt, best_cost, best_ds = "csr", float(k), 0.0  # unit: t_crs/call
     for f in formats or db.d_star.keys():
-        pred = db.predict(f, stats.d_mat)
+        pred = db.predict(f, stats.d_mat, batch=b)
         recs = [r.formats[f].mem_ratio for r in db.records if f in r.formats]
         if recs and float(np.median(recs)) > memory_budget_ratio:
             continue
@@ -271,13 +323,19 @@ class MachineModel:
     idx_bytes: int = 4
     segment_penalty: float = 3.0  # CSR/COO segmented-reduce inefficiency
 
-    def t_spmv(self, fmt: str, stats: MatrixStats, width: Optional[int] = None) -> float:
+    def t_spmv(self, fmt: str, stats: MatrixStats,
+               width: Optional[int] = None, batch: int = 1) -> float:
+        """Seconds per call.  ``batch`` B > 1 models an SpMM call carrying an
+        (n_cols, B) panel: the matrix stream is paid once per call while the
+        x gathers (and output writes, folded into the same term) scale with
+        B — which is exactly why SpMM amortizes better than B SpMVs."""
+        b = max(batch, 1)
         n, nnz = stats.n, stats.nnz
         if fmt == "csr" or fmt.startswith("coo"):
             stream = nnz * (self.val_bytes + self.idx_bytes) + n * self.idx_bytes
             gather = nnz * self.val_bytes            # x[] gathers
             return self.segment_penalty * (
-                stream / self.stream_bw + gather / self.gather_bw)
+                stream / self.stream_bw + b * gather / self.gather_bw)
         if fmt.startswith("ell") or fmt == "sell":
             w = width if width is not None else int(round(stats.mu + 3 * stats.sigma)) or 1
             if fmt == "sell":
@@ -285,27 +343,30 @@ class MachineModel:
             padded = n * w
             stream = padded * (self.val_bytes + self.idx_bytes)
             gather = padded * self.val_bytes
-            return stream / self.stream_bw + gather / self.gather_bw
+            return stream / self.stream_bw + b * gather / self.gather_bw
         if fmt == "hybrid":
             # per-block tuning keeps regular blocks at SELL-like width ~mu
             # and drops the heavy tail into CSR/COO; model as SELL plus a
             # small per-block dispatch/reassembly overhead
-            return 1.05 * self.t_spmv("sell", stats)
+            return 1.05 * self.t_spmv("sell", stats, batch=b)
         raise KeyError(fmt)
 
     def t_trans(self, fmt: str, stats: MatrixStats) -> float:
         # transformation streams CSR once and writes the new format once
-        return 2.0 * self.t_spmv(fmt, stats)
+        # (independent of how many RHS later ride on the result)
+        return 2.0 * self.t_spmv(fmt, stats, batch=1)
 
 
 def decide_cost_model(model: MachineModel, stats: MatrixStats,
                       expected_iterations: int = 100,
-                      formats: Sequence[str] = ("ell_row", "sell")) -> Decision:
+                      formats: Sequence[str] = ("ell_row", "sell"),
+                      batch: int = 1) -> Decision:
     k = max(expected_iterations, 1)
-    t_crs = model.t_spmv("csr", stats)
+    b = max(batch, 1)
+    t_crs = model.t_spmv("csr", stats, batch=b)
     best_fmt, best_cost = "csr", k * t_crs
     for f in formats:
-        cost = k * model.t_spmv(f, stats) + model.t_trans(f, stats)
+        cost = k * model.t_spmv(f, stats, batch=b) + model.t_trans(f, stats)
         if cost < best_cost:
             best_fmt, best_cost = f, cost
     return Decision(fmt=best_fmt, d_mat=stats.d_mat, d_star=float("nan"),

@@ -18,7 +18,6 @@ Padding conventions (needed because XLA requires static shapes):
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Tuple, Union
 

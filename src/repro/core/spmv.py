@@ -2,6 +2,8 @@
 
 These are the *semantic oracles* for the Pallas kernels in
 ``repro.kernels`` and the measurable implementations the auto-tuner times.
+Every (format, op) pair defined here is registered in
+``repro.core.dispatch`` — the single dispatch source of truth.
 
 Parallelization mapping (paper §3 -> TPU):
   * COO outer-loop + per-thread YY reduction  -> ``segment_sum`` (XLA builds
@@ -10,24 +12,34 @@ Parallelization mapping (paper §3 -> TPU):
     reduction; XLA/GSPMD parallelizes rows (outer) and the mesh can shard
     the band axis (inner) — both of the paper's schedules fall out of one
     expression with different sharding constraints.
+
+SpMM convention: ``x`` is a column panel ``(n_cols, B)`` and the result is
+``(n_rows, B)`` — one transformed matrix amortized over ``k * B`` products
+(the batch-parallel strengthening of the paper's ``k (t_crs - t_f) >
+t_trans`` rule).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from .formats import BucketedELL, CCS, COO, CSR, ELL
+from . import dispatch as _dispatch
+from .formats import BCSR, BucketedELL, CCS, COO, CSR, ELL
 
 
 # ---------------------------------------------------------------------------
 # CSR (paper's CRS baseline)
 # ---------------------------------------------------------------------------
-def spmv_csr(m: CSR, x: jax.Array) -> jax.Array:
-    """y = A @ x with A in CSR.  Row ids via binary search (static nnz_pad)."""
+def _csr_expanded_rows(m: CSR) -> jax.Array:
     ip = jnp.asarray(m.indptr)
     k = jnp.arange(m.nnz_pad)
     rows = jnp.searchsorted(ip, k, side="right") - 1
-    rows = jnp.clip(rows, 0, m.n_rows - 1)
+    return jnp.clip(rows, 0, m.n_rows - 1)
+
+
+def spmv_csr(m: CSR, x: jax.Array) -> jax.Array:
+    """y = A @ x with A in CSR.  Row ids via binary search (static nnz_pad)."""
+    rows = _csr_expanded_rows(m)
     contrib = jnp.asarray(m.data) * x[jnp.asarray(m.cols)]
     return jax.ops.segment_sum(contrib, rows, num_segments=m.n_rows,
                                indices_are_sorted=True)
@@ -35,9 +47,7 @@ def spmv_csr(m: CSR, x: jax.Array) -> jax.Array:
 
 def spmm_csr(m: CSR, x: jax.Array) -> jax.Array:
     """Multi-vector right-hand side: x (n_cols, k) -> (n_rows, k)."""
-    ip = jnp.asarray(m.indptr)
-    kk = jnp.arange(m.nnz_pad)
-    rows = jnp.clip(jnp.searchsorted(ip, kk, side="right") - 1, 0, m.n_rows - 1)
+    rows = _csr_expanded_rows(m)
     contrib = jnp.asarray(m.data)[:, None] * x[jnp.asarray(m.cols)]
     return jax.ops.segment_sum(contrib, rows, num_segments=m.n_rows,
                                indices_are_sorted=True)
@@ -53,15 +63,31 @@ def spmv_coo(m: COO, x: jax.Array) -> jax.Array:
                                indices_are_sorted=(m.order == "row"))
 
 
+def spmm_coo(m: COO, x: jax.Array) -> jax.Array:
+    contrib = jnp.asarray(m.data)[:, None] * x[jnp.asarray(m.cols)]
+    return jax.ops.segment_sum(contrib, jnp.asarray(m.rows),
+                               num_segments=m.n_rows,
+                               indices_are_sorted=(m.order == "row"))
+
+
 # ---------------------------------------------------------------------------
 # CCS — column-major scatter (paper's Phase-I product)
 # ---------------------------------------------------------------------------
-def spmv_ccs(m: CCS, x: jax.Array) -> jax.Array:
+def _ccs_expanded_cols(m: CCS) -> jax.Array:
     ip = jnp.asarray(m.indptr)
     k = jnp.arange(m.nnz_pad)
-    cols = jnp.clip(jnp.searchsorted(ip, k, side="right") - 1, 0, m.n_cols - 1)
-    contrib = jnp.asarray(m.data) * x[cols]
+    return jnp.clip(jnp.searchsorted(ip, k, side="right") - 1, 0, m.n_cols - 1)
+
+
+def spmv_ccs(m: CCS, x: jax.Array) -> jax.Array:
+    contrib = jnp.asarray(m.data) * x[_ccs_expanded_cols(m)]
     return jnp.zeros(m.n_rows, x.dtype).at[jnp.asarray(m.rows)].add(contrib)
+
+
+def spmm_ccs(m: CCS, x: jax.Array) -> jax.Array:
+    contrib = jnp.asarray(m.data)[:, None] * x[_ccs_expanded_cols(m)]
+    return jnp.zeros((m.n_rows, x.shape[1]),
+                     x.dtype).at[jnp.asarray(m.rows)].add(contrib)
 
 
 # ---------------------------------------------------------------------------
@@ -86,60 +112,105 @@ def spmm_ell(m: ELL, x: jax.Array) -> jax.Array:
 # BucketedELL (SELL-C-sigma adaptation)
 # ---------------------------------------------------------------------------
 def spmv_sell(m: BucketedELL, x: jax.Array) -> jax.Array:
+    # an all-zero matrix may carry an empty bucket list: the product is
+    # exactly zeros of (n_rows,) in x's dtype, not an error
     y = jnp.zeros(m.n_rows, x.dtype)
     perm = jnp.asarray(m.perm)
     for off, b in zip(m.row_offsets, m.buckets):
         yb = spmv_ell(b, x)
-        y = y.at[perm[off:off + b.n_rows]].set(yb)
+        y = y.at[perm[off:off + b.n_rows]].set(yb.astype(y.dtype))
+    return y
+
+
+def spmm_sell(m: BucketedELL, x: jax.Array) -> jax.Array:
+    y = jnp.zeros((m.n_rows, x.shape[1]), x.dtype)
+    perm = jnp.asarray(m.perm)
+    for off, b in zip(m.row_offsets, m.buckets):
+        yb = spmm_ell(b, x)
+        y = y.at[perm[off:off + b.n_rows]].set(yb.astype(y.dtype))
     return y
 
 
 # ---------------------------------------------------------------------------
-# dispatch
+# BCSR — b x b dense block matvecs (MXU-tile form of cache blocking)
 # ---------------------------------------------------------------------------
-def spmv(m, x: jax.Array) -> jax.Array:
-    from .formats import BCSR
-    from repro.partition import HybridMatrix, spmv_hybrid  # lazy: no cycle
-    if isinstance(m, HybridMatrix):
-        return spmv_hybrid(m, x)
-    if isinstance(m, BCSR):
-        return spmv_bcsr(m, x)
-    if isinstance(m, CSR):
-        return spmv_csr(m, x)
-    if isinstance(m, COO):
-        return spmv_coo(m, x)
-    if isinstance(m, CCS):
-        return spmv_ccs(m, x)
-    if isinstance(m, ELL):
-        return spmv_ell(m, x)
-    if isinstance(m, BucketedELL):
-        return spmv_sell(m, x)
-    raise TypeError(f"unknown sparse format: {type(m)}")
-
-
-def spmv_dense(dense: jax.Array, x: jax.Array) -> jax.Array:
-    return dense @ x
-
-
-__all__ = ["spmv", "spmv_csr", "spmm_csr", "spmv_coo", "spmv_ccs",
-           "spmv_ell", "spmm_ell", "spmv_sell", "spmv_dense"]
-
-
-def spmv_bcsr(m, x: jax.Array) -> jax.Array:
-    """y = A @ x, A in BCSR: a stream of b x b dense block matvecs —
-    gathered x block-slices times block tiles, segment-summed per block
-    row (the MXU-tile form of the paper's anticipated cache blocking)."""
-    from .formats import BCSR
-    assert isinstance(m, BCSR)
+def _bcsr_gather(m: BCSR, x: jax.Array):
     b = m.block
     nbr = m.n_block_rows
     ip = jnp.asarray(m.indptr)
     k = jnp.arange(m.nblocks_pad)
     brow = jnp.clip(jnp.searchsorted(ip, k, side="right") - 1, 0, nbr - 1)
     ncb = (m.n_cols + b - 1) // b
-    x_pad = jnp.pad(x, (0, ncb * b - m.n_cols))
-    x_blocks = x_pad.reshape(ncb, b)[jnp.asarray(m.block_cols)]  # (nb, b)
+    pads = [(0, ncb * b - m.n_cols)] + [(0, 0)] * (x.ndim - 1)
+    x_pad = jnp.pad(x, pads)
+    x_blocks = x_pad.reshape((ncb, b) + x.shape[1:])[jnp.asarray(m.block_cols)]
+    return brow, x_blocks
+
+
+def spmv_bcsr(m: BCSR, x: jax.Array) -> jax.Array:
+    """y = A @ x, A in BCSR: a stream of b x b dense block matvecs —
+    gathered x block-slices times block tiles, segment-summed per block
+    row (the MXU-tile form of the paper's anticipated cache blocking)."""
+    brow, x_blocks = _bcsr_gather(m, x)                       # (nb, b)
     contrib = jnp.einsum("kij,kj->ki", jnp.asarray(m.data), x_blocks)
-    y = jax.ops.segment_sum(contrib, brow, num_segments=nbr,
-                            indices_are_sorted=True)             # (nbr, b)
-    return y.reshape(nbr * b)[: m.n_rows]
+    y = jax.ops.segment_sum(contrib, brow, num_segments=m.n_block_rows,
+                            indices_are_sorted=True)          # (nbr, b)
+    return y.reshape(m.n_block_rows * m.block)[: m.n_rows]
+
+
+def spmm_bcsr(m: BCSR, x: jax.Array) -> jax.Array:
+    brow, x_blocks = _bcsr_gather(m, x)                       # (nb, b, k)
+    contrib = jnp.einsum("kij,kjc->kic", jnp.asarray(m.data), x_blocks)
+    y = jax.ops.segment_sum(contrib, brow, num_segments=m.n_block_rows,
+                            indices_are_sorted=True)          # (nbr, b, k)
+    return y.reshape(m.n_block_rows * m.block, x.shape[1])[: m.n_rows]
+
+
+# ---------------------------------------------------------------------------
+# dispatch — resolved through the core/dispatch registry
+# ---------------------------------------------------------------------------
+def spmv(m, x: jax.Array) -> jax.Array:
+    """y = A @ x for any registered sparse format."""
+    return _dispatch.dispatch(m, x, op="spmv")
+
+
+def spmm(m, x: jax.Array) -> jax.Array:
+    """Y = A @ X, X (n_cols, B), for any registered sparse format."""
+    return _dispatch.spmm(m, x)
+
+
+def spmv_dense(dense: jax.Array, x: jax.Array) -> jax.Array:
+    return dense @ x
+
+
+# ---------------------------------------------------------------------------
+# registration: formats (predicate-narrowed where one class serves two
+# names) and the reference-tier implementations defined above.  The hybrid
+# container registers itself in repro/partition/hybrid.py.
+# ---------------------------------------------------------------------------
+_dispatch.register_format("csr", CSR)
+_dispatch.register_format("ccs", CCS)
+_dispatch.register_format("coo_col", COO, lambda m: m.order == "col")
+_dispatch.register_format("coo_row", COO)
+_dispatch.register_format("ell_col", ELL, lambda m: m.order == "col")
+_dispatch.register_format("ell_row", ELL)
+_dispatch.register_format("sell", BucketedELL)
+_dispatch.register_format("bcsr", BCSR)
+
+for _fmt, _spmv_fn, _spmm_fn in (
+    ("csr", spmv_csr, spmm_csr),
+    ("coo_row", spmv_coo, spmm_coo),
+    ("coo_col", spmv_coo, spmm_coo),
+    ("ccs", spmv_ccs, spmm_ccs),
+    ("ell_row", spmv_ell, spmm_ell),
+    ("ell_col", spmv_ell, spmm_ell),
+    ("sell", spmv_sell, spmm_sell),
+    ("bcsr", spmv_bcsr, spmm_bcsr),
+):
+    _dispatch.register_impl(_fmt, "spmv", _spmv_fn)
+    _dispatch.register_impl(_fmt, "spmm", _spmm_fn)
+
+
+__all__ = ["spmv", "spmm", "spmv_csr", "spmm_csr", "spmv_coo", "spmm_coo",
+           "spmv_ccs", "spmm_ccs", "spmv_ell", "spmm_ell", "spmv_sell",
+           "spmm_sell", "spmv_bcsr", "spmm_bcsr", "spmv_dense"]

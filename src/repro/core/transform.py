@@ -13,9 +13,8 @@ Two implementation paths:
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -293,6 +292,7 @@ def _host_csr_to_hybrid(m: CSR, **kw):
 TRANSFORMS_HOST = {
     "bcsr": lambda m: host_csr_to_bcsr(m),
     "hybrid": _host_csr_to_hybrid,
+    "ccs": host_csr_to_ccs,
     "coo_row": host_csr_to_coo_row,
     "coo_col": host_csr_to_coo_col,
     "ell_row": lambda m: host_csr_to_ell(m, order="row"),

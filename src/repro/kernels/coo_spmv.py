@@ -55,3 +55,51 @@ def coo_spmv(data: jax.Array, rows: jax.Array, cols: jax.Array,
         interpret=interpret,
     )(data, rows, cols, x)
     return y32.astype(out_dtype)
+
+
+def _coo_spmm_kernel(data_ref, rows_ref, cols_ref, x_ref, y_ref):
+    """Multi-RHS COO: x (n_cols, block_k) panel pinned per k-block; the nnz
+    slabs walk sequentially (innermost grid axis) scatter-adding (slab,
+    block_k) contribution panels into the VMEM-resident y — the SpMM form
+    of the paper's per-thread YY accumulation, one panel per lane group."""
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    contrib = (data_ref[...].astype(jnp.float32)[:, None] *
+               x_ref[...].astype(jnp.float32)[cols_ref[...], :])
+    y_ref[...] = y_ref[...].at[rows_ref[...], :].add(contrib)
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "block_nnz",
+                                             "block_k", "interpret"))
+def coo_spmm(data: jax.Array, rows: jax.Array, cols: jax.Array,
+             x: jax.Array, *, n_rows: int, block_nnz: int = 4096,
+             block_k: int = 128, interpret: bool = True) -> jax.Array:
+    """Y = A @ X, A in COO, X (n_cols, k) -> Y (n_rows, k).
+
+    Grid = (k_blocks, nnz_blocks); nnz is the sequential accumulation axis
+    (marked by position — consecutive visits to each output block), k is
+    parallel.  Padded entries must be (row=0, col=0, val=0.0)."""
+    (nnz_pad,) = data.shape
+    n_cols, k = x.shape
+    assert nnz_pad % block_nnz == 0, (nnz_pad, block_nnz)
+    assert k % block_k == 0, (k, block_k)
+    grid = (k // block_k, nnz_pad // block_nnz)
+    out_dtype = jnp.result_type(data.dtype, x.dtype)
+    y32 = pl.pallas_call(
+        _coo_spmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_nnz,), lambda kk, i: (i,)),
+            pl.BlockSpec((block_nnz,), lambda kk, i: (i,)),
+            pl.BlockSpec((block_nnz,), lambda kk, i: (i,)),
+            pl.BlockSpec((n_cols, block_k), lambda kk, i: (0, kk)),
+        ],
+        out_specs=pl.BlockSpec((n_rows, block_k), lambda kk, i: (0, kk)),
+        out_shape=jax.ShapeDtypeStruct((n_rows, k), jnp.float32),
+        interpret=interpret,
+    )(data, rows, cols, x)
+    return y32.astype(out_dtype)

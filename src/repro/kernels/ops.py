@@ -6,7 +6,11 @@ Responsibilities:
   * accept the ``repro.core.formats`` pytree classes;
   * provide custom VJPs so the kernels are trainable (y = A@x  =>
     dx = A^T dy via a COO scatter; dA = dy_r * x_c at the stored positions);
-  * auto-select interpret mode off-TPU.
+  * auto-select interpret mode off-TPU;
+  * register every format-level wrapper in the ``repro.core.dispatch``
+    registry under the ``"kernel"`` tier — ``KERNEL_SPMV_IMPLS`` /
+    ``KERNEL_SPMM_IMPLS`` below are views of that registry, kept for
+    callers that want a plain dict.
 """
 from __future__ import annotations
 
@@ -15,8 +19,8 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.core import dispatch as _dispatch
 from repro.core.formats import COO, CSR, ELL, BucketedELL
 from . import coo_spmv as _coo
 from . import ell_spmv as _ell
@@ -48,6 +52,10 @@ def _block_sizes(n_rows: int, width: int) -> Tuple[int, int]:
     return br, bw
 
 
+def _block_k(k: int) -> int:
+    return min(128, max(8, 8 * ((k + 7) // 8)))
+
+
 # ---------------------------------------------------------------------------
 # raw-array entry points (padding + alignment)
 # ---------------------------------------------------------------------------
@@ -68,7 +76,7 @@ def ell_spmm_raw(data: jax.Array, cols: jax.Array, x: jax.Array,
     k = x.shape[1]
     br = min(128, max(8, 8 * ((n_rows + 7) // 8)))
     bw = 128 if width > 8 else 8
-    bk = min(128, max(8, 8 * ((k + 7) // 8)))
+    bk = _block_k(k)
     data = _pad_to(_pad_to(data, 0, br), 1, bw)
     cols = _pad_to(_pad_to(cols, 0, br), 1, bw)
     xp = _pad_to(x, 1, bk)
@@ -86,6 +94,21 @@ def coo_spmv_raw(data: jax.Array, rows: jax.Array, cols: jax.Array,
     cols = _pad_to(cols, 0, bn)
     return _coo.coo_spmv(data, rows, cols, x, n_rows=n_rows, block_nnz=bn,
                          interpret=_interpret(interpret))
+
+
+def coo_spmm_raw(data: jax.Array, rows: jax.Array, cols: jax.Array,
+                 x: jax.Array, n_rows: int,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    k = x.shape[1]
+    bn = min(4096, max(8, 8 * ((data.shape[0] + 7) // 8)))
+    bk = _block_k(k)
+    data = _pad_to(data, 0, bn)
+    rows = _pad_to(rows, 0, bn)
+    cols = _pad_to(cols, 0, bn)
+    xp = _pad_to(x, 1, bk)
+    y = _coo.coo_spmm(data, rows, cols, xp, n_rows=n_rows, block_nnz=bn,
+                      block_k=bk, interpret=_interpret(interpret))
+    return y[:, :k]
 
 
 # ---------------------------------------------------------------------------
@@ -116,11 +139,21 @@ ell_spmv_ad.defvjp(_ell_fwd, _ell_bwd)
 # ---------------------------------------------------------------------------
 # format-level entry points (what the auto-tuner plugs in)
 # ---------------------------------------------------------------------------
-def spmv_ell(m: ELL, x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
+def _ell_arrays(m: ELL):
     data, cols = jnp.asarray(m.data), jnp.asarray(m.cols)
     if m.order == "col":
         data, cols = data.T, cols.T
+    return data, cols
+
+
+def spmv_ell(m: ELL, x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
+    data, cols = _ell_arrays(m)
     return ell_spmv_raw(data, cols, x, interpret)
+
+
+def spmm_ell(m: ELL, x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
+    data, cols = _ell_arrays(m)
+    return ell_spmm_raw(data, cols, x, interpret)
 
 
 def spmv_coo(m: COO, x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
@@ -128,8 +161,13 @@ def spmv_coo(m: COO, x: jax.Array, interpret: Optional[bool] = None) -> jax.Arra
                         jnp.asarray(m.cols), x, m.n_rows, interpret)
 
 
-def spmv_csr(m: CSR, x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
-    """CSR via the jit-able IRP->IROW expansion + the COO kernel.
+def spmm_coo(m: COO, x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
+    return coo_spmm_raw(jnp.asarray(m.data), jnp.asarray(m.rows),
+                        jnp.asarray(m.cols), x, m.n_rows, interpret)
+
+
+def _csr_as_coo_arrays(m: CSR):
+    """The jit-able IRP->IROW expansion shared by the CSR kernel paths.
 
     Pure CSR's per-row segmented reduction has no efficient TPU mapping
     (DESIGN.md §2) — the row expansion is the TPU-idiomatic equivalent."""
@@ -138,43 +176,94 @@ def spmv_csr(m: CSR, x: jax.Array, interpret: Optional[bool] = None) -> jax.Arra
     rows = jnp.clip(jnp.searchsorted(ip, k, side="right") - 1, 0, m.n_rows - 1)
     rows = jnp.where(k < m.nnz, rows, 0).astype(jnp.int32)
     data = jnp.where(k < m.nnz, jnp.asarray(m.data), 0)
-    return coo_spmv_raw(data, rows, jnp.asarray(m.cols), x, m.n_rows,
-                        interpret)
+    return data, rows, jnp.asarray(m.cols)
+
+
+def spmv_csr(m: CSR, x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
+    """CSR via the IRP->IROW expansion + the COO kernel."""
+    data, rows, cols = _csr_as_coo_arrays(m)
+    return coo_spmv_raw(data, rows, cols, x, m.n_rows, interpret)
+
+
+def spmm_csr(m: CSR, x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
+    data, rows, cols = _csr_as_coo_arrays(m)
+    return coo_spmm_raw(data, rows, cols, x, m.n_rows, interpret)
 
 
 def spmv_sell(m: BucketedELL, x: jax.Array,
               interpret: Optional[bool] = None) -> jax.Array:
+    # an all-zero matrix may carry an empty bucket list — the product is
+    # exactly zeros of (n_rows,) in x's dtype, not None
     perm = jnp.asarray(m.perm)
-    y = None
+    y = jnp.zeros((m.n_rows,), x.dtype)
     for off, b in zip(m.row_offsets, m.buckets):
         yb = ell_spmv_raw(jnp.asarray(b.data), jnp.asarray(b.cols), x,
                           interpret)
-        if y is None:
-            y = jnp.zeros((m.n_rows,), yb.dtype)
-        y = y.at[perm[off:off + b.n_rows]].set(yb)
+        y = y.at[perm[off:off + b.n_rows]].set(yb.astype(y.dtype))
     return y
+
+
+def spmm_sell(m: BucketedELL, x: jax.Array,
+              interpret: Optional[bool] = None) -> jax.Array:
+    perm = jnp.asarray(m.perm)
+    y = jnp.zeros((m.n_rows, x.shape[1]), x.dtype)
+    for off, b in zip(m.row_offsets, m.buckets):
+        yb = ell_spmm_raw(jnp.asarray(b.data), jnp.asarray(b.cols), x,
+                          interpret)
+        y = y.at[perm[off:off + b.n_rows]].set(yb.astype(y.dtype))
+    return y
+
+
+def _kernel_block_impls(op: str, interpret: Optional[bool]):
+    """Per-block overrides for the hybrid container: every kernel-tier impl
+    except hybrid itself, with ``interpret`` bound."""
+    return {f: functools.partial(impl, interpret=interpret)
+            for f, impl in _dispatch.impl_table(op, "kernel",
+                                                exclude=("hybrid",)).items()}
 
 
 def spmv_hybrid(m, x: jax.Array,
                 interpret: Optional[bool] = None) -> jax.Array:
     """Partitioned hybrid matrix: each row block through its own format's
     Pallas kernel (reassembly lives in the partition subsystem)."""
-    from repro.partition import spmv_hybrid as _dispatch
-    impls = {f: functools.partial(impl, interpret=interpret)
-             for f, impl in KERNEL_SPMV_IMPLS.items() if f != "hybrid"}
-    return _dispatch(m, x, impls=impls)
+    from repro.partition import spmv_hybrid as _hyb
+    return _hyb(m, x, impls=_kernel_block_impls("spmv", interpret))
 
 
-KERNEL_SPMV_IMPLS = {
-    "csr": spmv_csr,
-    "coo_row": spmv_coo,
-    "coo_col": spmv_coo,
-    "ell_row": spmv_ell,
-    "ell_col": spmv_ell,
-    "sell": spmv_sell,
-    "hybrid": spmv_hybrid,
-}
+def spmm_hybrid(m, x: jax.Array,
+                interpret: Optional[bool] = None) -> jax.Array:
+    from repro.partition import spmm_hybrid as _hyb
+    return _hyb(m, x, impls=_kernel_block_impls("spmm", interpret))
 
-__all__ = ["ell_spmv_raw", "ell_spmm_raw", "coo_spmv_raw", "ell_spmv_ad",
-           "spmv_ell", "spmv_coo", "spmv_csr", "spmv_sell", "spmv_hybrid",
-           "KERNEL_SPMV_IMPLS"]
+
+# ---------------------------------------------------------------------------
+# registry: the kernel tier of repro.core.dispatch
+# ---------------------------------------------------------------------------
+for _fmt, _spmv_fn, _spmm_fn in (
+    ("csr", spmv_csr, spmm_csr),
+    ("coo_row", spmv_coo, spmm_coo),
+    ("coo_col", spmv_coo, spmm_coo),
+    ("ell_row", spmv_ell, spmm_ell),
+    ("ell_col", spmv_ell, spmm_ell),
+    ("sell", spmv_sell, spmm_sell),
+    ("hybrid", spmv_hybrid, spmm_hybrid),
+):
+    _dispatch.register_impl(_fmt, "spmv", _spmv_fn, tier="kernel")
+    _dispatch.register_impl(_fmt, "spmm", _spmm_fn, tier="kernel")
+
+# read-only dict views of the registry, recomputed on access so later
+# registrations (e.g. a future bcsr Pallas kernel) are never missed — the
+# single source of truth stays in core/dispatch.  Mutating the returned
+# dict has no effect; add or override implementations with
+# ``repro.core.dispatch.register_impl(fmt, op, fn, tier="kernel")``.
+def __getattr__(name: str):
+    if name == "KERNEL_SPMV_IMPLS":
+        return _dispatch.impl_table("spmv", "kernel")
+    if name == "KERNEL_SPMM_IMPLS":
+        return _dispatch.impl_table("spmm", "kernel")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+__all__ = ["ell_spmv_raw", "ell_spmm_raw", "coo_spmv_raw", "coo_spmm_raw",
+           "ell_spmv_ad", "spmv_ell", "spmm_ell", "spmv_coo", "spmm_coo",
+           "spmv_csr", "spmm_csr", "spmv_sell", "spmm_sell", "spmv_hybrid",
+           "spmm_hybrid", "KERNEL_SPMV_IMPLS", "KERNEL_SPMM_IMPLS"]

@@ -13,7 +13,6 @@ import time              # noqa: E402
 import traceback         # noqa: E402
 
 import jax               # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import ARCH_IDS, SHAPES, get_config        # noqa: E402
 from repro.launch.analytic import analytic_costs              # noqa: E402

@@ -20,7 +20,6 @@ import argparse          # noqa: E402
 import json              # noqa: E402
 import time              # noqa: E402
 
-import jax               # noqa: E402
 
 from repro.configs import SHAPES, get_config                  # noqa: E402
 from repro.launch.analytic import analytic_costs              # noqa: E402

@@ -219,10 +219,8 @@ def weighted_costs(hlo: str) -> WeightedCosts:
         entry = roots[-1] if roots else next(iter(comps))
 
     loops: Dict[str, int] = {}
-    seen: set = set()
 
     def walk(name: str, mult: float) -> Tuple[float, float]:
-        key = (name, mult)
         coll = per_coll.get(name, 0) * mult
         fl = per_flops.get(name, 0) * mult
         for c in set(callees.get(name, [])):

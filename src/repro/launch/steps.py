@@ -6,7 +6,6 @@ mapping is shape-aware (B=1 long-context decode falls back to sequence
 sharding of the KV cache = context parallelism)."""
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -29,7 +29,6 @@ def main() -> None:
                     help="lower+compile the step and exit")
     args = ap.parse_args()
 
-    import jax
     from repro.configs import get_config, smoke_config
     from repro.configs.base import ShapeConfig
     from repro.data import SyntheticLM, data_config_for

@@ -6,7 +6,7 @@ apply is a pure function.  Weights live in fp32; applies cast to the
 config compute dtype (bf16 by default)."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

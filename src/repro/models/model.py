@@ -14,14 +14,13 @@ Public API:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.sharding.rules import (ParamSpec, axes_tree, init_params,
+from repro.sharding.rules import (ParamSpec, init_params,
                                   param_count, stack_spec,
                                   with_logical_constraint as wlc)
 from .blocks import (block_apply, block_spec, init_block_cache,

@@ -21,7 +21,7 @@ branches are compiled once and selected by ``lax.cond`` — run-time data
 transformation at zero recompile cost."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

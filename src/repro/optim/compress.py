@@ -11,7 +11,6 @@ Wire cost: 1 byte/element instead of 4 (f32) — a 4x cut of the gradient
 all-reduce term, aimed at the pod-to-pod links (DESIGN.md §6)."""
 from __future__ import annotations
 
-import functools
 from typing import Any, Tuple
 
 import jax

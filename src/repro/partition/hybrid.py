@@ -24,11 +24,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dispatch as _dispatch
 from repro.core.autotune import (MachineModel, TuningDB, decide_cost_model,
                                  decide_generalized, decide_paper)
 from repro.core.formats import CSR, MatrixStats, memory_bytes
 from repro.core.policy import MemoryPolicy
-from repro.core.spmv import spmm_csr, spmm_ell, spmv as spmv_ref
 from repro.core.transform import TRANSFORMS_HOST, pad_to_multiple
 
 from .strategies import PARTITIONERS
@@ -139,12 +139,15 @@ def choose_block_format(stats: MatrixStats,
                         model: Optional[MachineModel] = None,
                         policy: Optional[MemoryPolicy] = None,
                         expected_iterations: int = 100,
-                        formats: Sequence[str] = BLOCK_FORMATS) -> str:
+                        formats: Sequence[str] = BLOCK_FORMATS,
+                        batch: int = 1) -> str:
     """One block's format via the same machinery as the whole-matrix tuner.
 
     Candidates are first filtered by the memory policy (estimate vs the
     block's own CSR estimate), then ranked by the paper rule, the
-    generalized DB prediction, or the roofline cost model."""
+    generalized DB prediction, or the roofline cost model.  ``batch`` is
+    the expected RHS count per call — amortization runs over
+    ``expected_iterations * batch`` products."""
     policy = policy or MemoryPolicy()
     csr_bytes = max(policy.estimate_bytes("csr", stats), 1)
 
@@ -163,9 +166,11 @@ def choose_block_format(stats: MatrixStats,
     if db is not None:
         return decide_generalized(db, stats, expected_iterations,
                                   formats=cand,
-                                  memory_budget_ratio=policy.budget_ratio).fmt
+                                  memory_budget_ratio=policy.budget_ratio,
+                                  batch=batch).fmt
     return decide_cost_model(model or MachineModel(), stats,
-                             expected_iterations, formats=cand).fmt
+                             expected_iterations, formats=cand,
+                             batch=batch).fmt
 
 
 # ---------------------------------------------------------------------------
@@ -205,6 +210,7 @@ def build_hybrid(m: CSR,
                  expected_iterations: int = 100,
                  sort_rows: Optional[bool] = None,
                  formats: Sequence[str] = BLOCK_FORMATS,
+                 batch: int = 1,
                  **strategy_kw) -> Tuple[HybridMatrix, HybridReport]:
     """Partition -> per-block stats -> per-block decision -> materialize.
 
@@ -239,7 +245,7 @@ def build_hybrid(m: CSR,
         fmt = choose_block_format(stats, db=db, rule=rule, model=model,
                                   policy=policy,
                                   expected_iterations=expected_iterations,
-                                  formats=formats)
+                                  formats=formats, batch=batch)
         t1 = time.perf_counter()
         obj = TRANSFORMS_HOST[fmt](sub)
         dt = time.perf_counter() - t1
@@ -271,42 +277,47 @@ def host_csr_to_hybrid(m: CSR, strategy: str = "variance",
 
 
 # ---------------------------------------------------------------------------
-# execution
+# execution — per-block implementations resolved through core/dispatch
 # ---------------------------------------------------------------------------
+def _block_impl(fmt: str, op: str,
+                impls: Optional[Dict[str, Callable]]) -> Callable:
+    fn = (impls or {}).get(fmt)
+    return fn if fn is not None else _dispatch.get_impl(fmt, op)
+
+
 def spmv_hybrid(m: HybridMatrix, x: jax.Array,
                 impls: Optional[Dict[str, Callable]] = None) -> jax.Array:
     """y = A @ x: each block through its format's SpMV, then reassemble.
 
     ``impls`` maps format name -> callable(block, x) (e.g. the Pallas
-    wrappers in ``kernels/ops.py``); defaults to the jnp references."""
-    outs = []
-    for fmt, b in zip(m.formats, m.blocks):
-        fn = (impls or {}).get(fmt, spmv_ref)
-        outs.append(fn(b, x))
+    wrappers in ``kernels/ops.py``); formats not overridden resolve to the
+    reference tier of the ``core/dispatch`` registry."""
+    outs = [_block_impl(fmt, "spmv", impls)(b, x)
+            for fmt, b in zip(m.formats, m.blocks)]
     y = jnp.concatenate(outs) if len(outs) > 1 else outs[0]
     if m.identity_perm:
         return y
     return jnp.zeros(m.n_rows, y.dtype).at[jnp.asarray(m.perm)].set(y)
 
 
-def _spmm_block(fmt: str, b, x: jax.Array) -> jax.Array:
-    from repro.core.formats import CSR as _CSR, ELL as _ELL
-    if isinstance(b, _CSR):
-        return spmm_csr(b, x)
-    if isinstance(b, _ELL) and b.order == "row":
-        return spmm_ell(b, x)
-    # generic fallback: vmap the per-format SpMV over RHS columns
-    return jax.vmap(lambda col: spmv_ref(b, col), in_axes=1, out_axes=1)(x)
-
-
-def spmm_hybrid(m: HybridMatrix, x: jax.Array) -> jax.Array:
-    """Multi-vector RHS: x (n_cols, k) -> (n_rows, k)."""
-    outs = [_spmm_block(fmt, b, x) for fmt, b in zip(m.formats, m.blocks)]
+def spmm_hybrid(m: HybridMatrix, x: jax.Array,
+                impls: Optional[Dict[str, Callable]] = None) -> jax.Array:
+    """Multi-vector RHS: x (n_cols, B) -> (n_rows, B) — each block's own
+    SpMM, reassembling the (rows, B) panels through the row permutation."""
+    outs = [_block_impl(fmt, "spmm", impls)(b, x)
+            for fmt, b in zip(m.formats, m.blocks)]
     y = jnp.concatenate(outs, axis=0) if len(outs) > 1 else outs[0]
     if m.identity_perm:
         return y
     return jnp.zeros((m.n_rows, x.shape[1]),
                      y.dtype).at[jnp.asarray(m.perm)].set(y)
+
+
+# the hybrid container is a first-class format: one registration here is
+# the only place it is wired into the dispatch stack
+_dispatch.register_format("hybrid", HybridMatrix)
+_dispatch.register_impl("hybrid", "spmv", spmv_hybrid)
+_dispatch.register_impl("hybrid", "spmm", spmm_hybrid)
 
 
 __all__ = ["BLOCK_FORMATS", "HybridMatrix", "BlockDecision", "HybridReport",

@@ -1,2 +1,4 @@
 from .engine import Request, ServeEngine
 from .spmv_service import MatrixEntry, SpMVService
+
+__all__ = ["Request", "ServeEngine", "MatrixEntry", "SpMVService"]

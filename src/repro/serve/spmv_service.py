@@ -2,30 +2,53 @@
 
 Production framing of the paper's on-line phase: clients register a sparse
 matrix once (a model's MoE routing table, a graph adjacency, a solver
-operator) and then stream many SpMV requests against it.  Registration is
-where the run-time transformation happens — per-row-block via the
-partition subsystem — and the amortization count ``expected_iterations``
-is exactly the paper's k in  k * (t_crs - t_f) > t_trans.
+operator) and then stream many SpMV/SpMM requests against it.
+Registration is where the run-time transformation happens — per-row-block
+via the partition subsystem — and the amortization count
+``expected_iterations`` is the paper's k in ``k * (t_crs - t_f) >
+t_trans``; with B right-hand sides per call it strengthens to
+``k * B * (t_crs - t_f) > t_trans``.
 
-The service keeps one jit-compiled dispatcher per registered matrix
-(compiled once per block structure) and exposes the per-matrix decisions
-for observability.
+Two query paths:
+
+  * direct — ``spmv(key, x)`` / ``spmm(key, X)``: one blocking call, one
+    compiled dispatcher per (matrix, op);
+  * micro-batched — ``submit(key, x) -> Future`` enqueues a single vector;
+    ``flush()`` (or the queue reaching ``max_batch``) stacks the pending
+    vectors into one ``(n_cols, B)`` panel and serves them with a *single*
+    SpMM call per matrix.  Panels are zero-padded to ``max_batch`` so the
+    SpMM dispatcher compiles exactly once per matrix; the ragged last
+    micro-batch just carries padding columns that are sliced off.
+
+The service keeps jit-compiled dispatchers per registered matrix (compiled
+once per block structure), releases them on ``evict``/re-``register`` so
+long-lived services don't accumulate stale executables, and exposes the
+per-matrix decisions and compile counts for observability.
 """
 from __future__ import annotations
 
+import threading
 import time
+from concurrent.futures import Future
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.autotune import MachineModel, TuningDB, time_fn
 from repro.core.formats import CSR, memory_bytes
-from repro.core.spmv import spmv as spmv_csr_ref
+from repro.core.spmv import spmv as spmv_ref
 from repro.core.policy import MemoryPolicy
-from repro.partition import HybridReport, build_hybrid, spmv_hybrid
+from repro.partition import HybridReport, build_hybrid, spmm_hybrid, spmv_hybrid
+
+
+def _cache_size(fn: Optional[Callable]) -> int:
+    """Compiled-executable count of a jitted dispatcher (0 if unavailable)."""
+    try:
+        return int(fn._cache_size())  # jax's jit wrapper
+    except Exception:
+        return 0
 
 
 @dataclass
@@ -33,14 +56,25 @@ class MatrixEntry:
     matrix: Any                 # HybridMatrix
     report: HybridReport
     fn: Callable                # jitted spmv for this block structure
+    spmm_fn: Callable           # jitted spmm for this block structure
     t_build: float
     t_csr: float = 0.0          # measured whole-matrix CSR SpMV (s/call)
     t_hybrid: float = 0.0       # measured hybrid SpMV (s/call)
     n_calls: int = 0
     t_serve: float = 0.0        # cumulative wall seconds inside spmv()
+    n_spmm_calls: int = 0
+    n_spmm_cols: int = 0        # total RHS columns served through spmm
+    builds: int = 1             # times this key's operator was (re)built
+    pending: List[Tuple[Future, jax.Array]] = field(default_factory=list)
+    # guards pending/dead: submit() may race flush()/evict() across threads
+    lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+    dead: bool = False          # set by _release; refuses new submits
 
     def formats(self) -> Dict[str, int]:
         return self.report.format_counts()
+
+    def compile_count(self) -> int:
+        return _cache_size(self.fn) + _cache_size(self.spmm_fn)
 
 
 @dataclass
@@ -50,57 +84,194 @@ class SpMVService:
     >>> svc = SpMVService()
     >>> svc.register("graph0", csr, expected_iterations=1000)
     >>> y = svc.spmv("graph0", x)
+    >>> Y = svc.spmm("graph0", X)            # X: (n_cols, B)
+    >>> f = svc.submit("graph0", x); svc.flush(); y = f.result()
     """
     db: Optional[TuningDB] = None
     model: Optional[MachineModel] = None
     policy: Optional[MemoryPolicy] = None
     strategy: str = "variance"
-    impls: Optional[Dict[str, Callable]] = None   # Pallas kernel overrides
+    impls: Optional[Dict[str, Callable]] = None   # Pallas spmv overrides
+    spmm_impls: Optional[Dict[str, Callable]] = None  # Pallas spmm overrides
+    max_batch: int = 32         # micro-batch flush threshold / panel width
+    pad_batches: bool = True    # zero-pad panels to max_batch (one compile)
     entries: Dict[str, MatrixEntry] = field(default_factory=dict)
 
     def register(self, key: str, csr: CSR, expected_iterations: int = 100,
-                 measure_baseline: bool = True, **build_kw) -> MatrixEntry:
+                 measure_baseline: bool = True, batch: int = 1,
+                 **build_kw) -> MatrixEntry:
         """Build the per-block-tuned operator for ``csr`` under ``key``.
 
-        ``measure_baseline`` times one whole-matrix CSR SpMV and one hybrid
-        SpMV (a few extra calls at registration) so ``stats()`` can report
-        true amortization; re-registering a key replaces its operator."""
+        ``batch`` is the expected RHS count per call, fed to the
+        batch-aware tuner (amortization over ``expected_iterations *
+        batch`` products).  ``measure_baseline`` times one whole-matrix CSR
+        SpMV and one hybrid SpMV (a few extra calls at registration) so
+        ``stats()`` can report true amortization; re-registering a key
+        replaces its operator and releases the stale compiled executables."""
+        # keep the prior operator serving until the replacement is ready —
+        # it is popped and released only at the swap below, so concurrent
+        # spmv/spmm/submit against this key never see a registration gap
+        prior = self.entries.get(key)
+        builds = prior.builds + 1 if prior is not None else 1
         t0 = time.perf_counter()
         hyb, report = build_hybrid(
             csr, strategy=self.strategy, db=self.db, model=self.model,
             policy=self.policy, expected_iterations=expected_iterations,
-            **build_kw)
+            batch=batch, **build_kw)
         fn = jax.jit(lambda m, x: spmv_hybrid(m, x, impls=self.impls))
+        spmm_fn = jax.jit(
+            lambda m, x: spmm_hybrid(m, x, impls=self.spmm_impls))
         t_build = time.perf_counter() - t0
         t_csr = t_hyb = 0.0
         if measure_baseline:
             x0 = jnp.ones((csr.n_cols,), jnp.float32)
-            t_csr = time_fn(jax.jit(spmv_csr_ref), csr, x0, iters=1,
+            t_csr = time_fn(jax.jit(spmv_ref), csr, x0, iters=1,
                             warmup=1)
             t_hyb = time_fn(fn, hyb, x0, iters=1, warmup=1)
         entry = MatrixEntry(matrix=hyb, report=report, fn=fn,
-                            t_build=t_build, t_csr=t_csr, t_hybrid=t_hyb)
+                            spmm_fn=spmm_fn, t_build=t_build, t_csr=t_csr,
+                            t_hybrid=t_hyb, builds=builds)
         self.entries[key] = entry
+        if prior is not None:
+            # the old operator was valid to the end: serve its queued
+            # vectors before releasing it rather than failing their futures
+            try:
+                self._flush_entry(prior)
+            except Exception:
+                pass  # the panel's futures already carry the exception
+            self._release(key, prior)
         return entry
 
+    # -- direct paths --------------------------------------------------------
     def spmv(self, key: str, x: jax.Array) -> jax.Array:
         entry = self.entries[key]
         t0 = time.perf_counter()
         y = jax.block_until_ready(entry.fn(entry.matrix, jnp.asarray(x)))
-        entry.n_calls += 1
-        entry.t_serve += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        with entry.lock:
+            entry.n_calls += 1
+            entry.t_serve += dt
         return y
 
+    def spmm(self, key: str, x: jax.Array) -> jax.Array:
+        """Y = A @ X with X an (n_cols, B) panel — one call, B products."""
+        entry = self.entries[key]
+        x = jnp.asarray(x)
+        if x.ndim != 2:
+            raise ValueError(f"spmm expects (n_cols, B); got {x.shape}")
+        t0 = time.perf_counter()
+        y = jax.block_until_ready(entry.spmm_fn(entry.matrix, x))
+        dt = time.perf_counter() - t0
+        with entry.lock:
+            entry.n_spmm_calls += 1
+            entry.n_spmm_cols += int(x.shape[1])
+            entry.t_serve += dt
+        return y
+
+    # -- micro-batching queue ------------------------------------------------
+    def submit(self, key: str, x: jax.Array) -> "Future":
+        """Enqueue one SpMV; resolved by ``flush`` (auto at ``max_batch``)
+        through a single SpMM call per matrix."""
+        entry = self.entries[key]
+        x = jnp.asarray(x)
+        if x.shape != (entry.matrix.n_cols,):
+            # reject here so one bad vector can never poison a whole panel
+            raise ValueError(f"expected x of shape ({entry.matrix.n_cols},); "
+                             f"got {x.shape}")
+        fut: Future = Future()
+        with entry.lock:
+            if entry.dead:
+                # racing evict/re-register: never enqueue onto a released
+                # entry — nothing would ever flush it
+                raise KeyError(f"matrix {key!r} was evicted")
+            entry.pending.append((fut, x))
+            full = len(entry.pending) >= self.max_batch
+        if full:
+            self._flush_entry(entry)
+        return fut
+
+    def flush(self, key: Optional[str] = None) -> int:
+        """Serve all pending vectors (of ``key``, or every matrix) in one
+        SpMM per matrix.  Returns the number of vectors served — the last
+        micro-batch may be ragged (fewer than ``max_batch`` columns)."""
+        if key is not None:
+            entries = [self.entries[key]]
+        else:  # tolerate evictions racing the snapshot
+            entries = [e for k in list(self.entries)
+                       if (e := self.entries.get(k)) is not None]
+        served, first_err = 0, None
+        for e in entries:
+            try:
+                served += self._flush_entry(e)
+            except Exception as err:
+                # that panel's futures already carry the exception; keep
+                # serving the other matrices and re-raise at the end
+                if first_err is None:
+                    first_err = err
+        if first_err is not None:
+            raise first_err
+        return served
+
+    def pending_count(self, key: str) -> int:
+        return len(self.entries[key].pending)
+
+    def _flush_entry(self, entry: MatrixEntry) -> int:
+        with entry.lock:
+            batch, entry.pending = entry.pending, []
+        if not batch:
+            return 0
+        b = len(batch)
+        try:
+            X = jnp.stack([x for _, x in batch], axis=1)   # (n_cols, b)
+            if self.pad_batches and b < self.max_batch:
+                X = jnp.pad(X, ((0, 0), (0, self.max_batch - b)))
+            t0 = time.perf_counter()
+            Y = jax.block_until_ready(entry.spmm_fn(entry.matrix, X))
+        except Exception as e:
+            # never strand a future: the whole panel fails together
+            for fut, _ in batch:
+                fut.set_exception(e)
+            raise
+        dt = time.perf_counter() - t0
+        with entry.lock:
+            entry.n_spmm_calls += 1
+            entry.n_spmm_cols += b
+            entry.t_serve += dt
+        for i, (fut, _) in enumerate(batch):
+            fut.set_result(Y[:, i])
+        return b
+
+    # -- lifecycle -----------------------------------------------------------
     def evict(self, key: str) -> None:
-        self.entries.pop(key, None)
+        """Drop a matrix and release its compiled dispatchers."""
+        entry = self.entries.pop(key, None)
+        if entry is not None:
+            self._release(key, entry)
+
+    def _release(self, key: str, entry: MatrixEntry) -> None:
+        with entry.lock:
+            entry.dead = True
+            stranded, entry.pending = entry.pending, []
+        for fut, _ in stranded:
+            fut.set_exception(KeyError(f"matrix {key!r} evicted with "
+                                       "requests pending"))
+        for fn in (entry.fn, entry.spmm_fn):
+            clear = getattr(fn, "clear_cache", None)
+            if callable(clear):
+                clear()
+        # drop the jitted closures so the executables are collectable even
+        # if a caller keeps the MatrixEntry alive
+        entry.fn = entry.spmm_fn = _evicted
 
     def stats(self) -> Dict[str, Dict[str, Any]]:
-        """Per-matrix observability: block formats, build/serve time, and
-        amortization — the paper's k*(t_crs - t_f) > t_trans with k the
-        calls served so far (None when the baseline was not measured)."""
+        """Per-matrix observability: block formats, build/serve time,
+        compile counts, micro-batch throughput, and amortization — the
+        paper's k*B*(t_crs - t_f) > t_trans with k*B the products served so
+        far (None when the baseline was not measured)."""
         out = {}
         for key, e in self.entries.items():
-            saved = (e.n_calls * (e.t_csr - e.t_hybrid)
+            products = e.n_calls + e.n_spmm_cols
+            saved = (products * (e.t_csr - e.t_hybrid)
                      if e.t_csr > 0 else None)
             out[key] = {
                 "n_blocks": e.matrix.n_blocks,
@@ -108,11 +279,20 @@ class SpMVService:
                 "bytes": memory_bytes(e.matrix),
                 "t_build_s": e.t_build,
                 "n_calls": e.n_calls,
+                "n_spmm_calls": e.n_spmm_calls,
+                "n_spmm_cols": e.n_spmm_cols,
+                "pending": len(e.pending),
+                "builds": e.builds,
+                "compiled": e.compile_count(),
                 "t_serve_s": e.t_serve,
                 "amortized": (None if saved is None
                               else saved >= e.t_build),
             }
         return out
+
+
+def _evicted(m, x):
+    raise RuntimeError("this matrix entry was evicted; re-register it")
 
 
 __all__ = ["SpMVService", "MatrixEntry"]

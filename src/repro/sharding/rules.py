@@ -22,9 +22,8 @@ Default placement (production posture):
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -241,10 +240,6 @@ def with_logical_constraint(x: jax.Array, axes: Axes,
 
 
 def _current_mesh() -> Optional[Mesh]:
-    try:
-        env = jax.sharding.get_abstract_mesh()  # jax>=0.5 style
-    except Exception:
-        env = None
     try:
         from jax._src import mesh as mesh_lib
         m = mesh_lib.thread_resources.env.physical_mesh

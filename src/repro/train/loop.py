@@ -12,12 +12,11 @@ Production posture (DESIGN.md §6):
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore
 from repro.configs.base import ModelConfig

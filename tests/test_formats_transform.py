@@ -8,7 +8,7 @@ import jax.numpy as jnp
 pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (CSR, MatrixStats, csr_from_dense, host_csr_to_ccs,
+from repro.core import (MatrixStats, csr_from_dense, host_csr_to_ccs,
                         host_csr_to_ccs_paper, host_csr_to_coo_col,
                         host_csr_to_coo_row, host_csr_to_ell,
                         host_csr_to_sell, device_csr_to_ccs,

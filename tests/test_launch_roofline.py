@@ -2,14 +2,12 @@
 mesh helpers, dry-run artifact sanity."""
 import glob
 import json
-import os
 
-import numpy as np
 import pytest
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, SHAPES, get_config
-from repro.launch.roofline import (CollectiveStats, Roofline,
+from repro.launch.roofline import (Roofline,
                                    parse_collectives, _shape_bytes)
 from repro.launch.steps import default_microbatches, input_specs
 

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 from repro.configs import ARCH_IDS, get_config, smoke_config
 from repro.models import (decode_step, forward, init, init_caches, loss_fn,
                           model_spec, n_params, prefill)
-from repro.sharding.rules import axes_tree, init_params
+from repro.sharding.rules import init_params
 
 B, S = 2, 32
 

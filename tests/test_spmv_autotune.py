@@ -114,7 +114,6 @@ def test_generalized_rule_amortization(tiny_db):
     # with a single iteration, transformation can only pay if t_trans ~ 0;
     # with many iterations the decision can only move toward transforming.
     d1000 = decide_generalized(tiny_db, st_, expected_iterations=1000)
-    order = {"csr": 0}
     assert d1.expected_gain <= d1000.expected_gain + 1e-9
     assert d1.fmt in ("csr", "ell_row", "coo_row")
     assert d1000.fmt in ("csr", "ell_row", "coo_row")

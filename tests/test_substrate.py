@@ -1,5 +1,4 @@
 """Data pipeline, checkpointing, fault-tolerant training, serve engine."""
-import os
 
 import numpy as np
 import pytest
@@ -10,7 +9,7 @@ from repro.checkpoint import (AsyncCheckpointer, available_steps,
                               latest_step, restore, save)
 from repro.configs import get_config, smoke_config
 from repro.data import DataConfig, Prefetcher, SyntheticLM, data_config_for
-from repro.models import decode_step, forward, init, init_caches, prefill
+from repro.models import forward, init
 from repro.serve import ServeEngine
 from repro.train import TrainConfig, Trainer, run_with_restarts
 

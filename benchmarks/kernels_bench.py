@@ -1,49 +1,163 @@
-"""Kernel-level SpMV: Pallas (interpret) vs pure-jnp reference wall times
-plus the arithmetic-intensity-derived TPU projection per matrix.
+"""Kernel-level benchmark: tuned vs default launch geometry per
+(format, op), and the native row-segmented CSR kernel vs the old
+CSR-via-COO detour.
 
-The interpret-mode timing is NOT a TPU number (it executes the kernel body
-in Python); what matters is (a) numerical agreement with the oracle and
-(b) the static byte/flop accounting used in §Roofline.  Wall-clock columns
-compare the jnp reference paths (the auto-tuner's measured backend)."""
+Matrices are chosen per format the way the paper's auto-tuner would route
+them: CSR is benched on torso1 — the suite's flagship heavy-tail matrix
+(D_mat 5.72), exactly the kind the D_mat–R rule keeps in CRS (the paper
+removed torso1's ELL run for memory overflow) — while the regular,
+transform-friendly chem_master1 carries the ELL/SELL/COO/BCSR rows.
+
+Every (format, op) pair runs through ``core.kernel_tune.KernelTuner`` —
+the default launch is always one of the timed candidates, so the reported
+``tuned_speedup = t_default / t_best`` is >= 1.0 by construction (equality
+means the default was already the winner).  The CSR rows additionally time
+``ops.spmv_csr_via_coo`` (the pre-native path, at the geometry it shipped
+with) head-to-head against the tuned native kernel, interleaving the two
+and taking per-path minima so scheduler drift cancels; ``native_vs_coo``
+is that ratio.
+
+Interpret-mode caveat: off-TPU the Pallas kernels execute in the
+interpreter, so absolute times are not TPU numbers — the *relative*
+geometry ranking and the regression-guard properties (tuned >= default,
+native CSR SpMV > detour) are what the CI smoke step checks.
+
+    PYTHONPATH=src python -m benchmarks.kernels_bench [--quick]
+        [--scale S] [--iters N] [--json OUT.json]
+"""
 from __future__ import annotations
 
-from typing import List
+import argparse
+import json
+import time
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import MatrixStats, host_csr_to_ell, spmv, time_fn
+from repro.core import MatrixStats, dispatch, host_csr_to_ell, spmv, time_fn
+from repro.core.kernel_tune import KernelTuner
 from repro.core.suite import paper_suite
+from repro.core.transform import TRANSFORMS_HOST
 from repro.kernels import ops, ref
 
 from .common import Row
 
+# matrix -> formats benched on it (formats where the D_mat–R rule would
+# actually land that matrix; see module docstring)
+BENCH_PLAN: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+    ("torso1", ("csr", "coo_row")),
+    ("chem_master1", ("ell_row", "sell", "coo_row", "bcsr")),
+)
+LEGACY_BASELINES: Dict[Tuple[str, str], Callable] = {
+    ("csr", "spmv"): ops.spmv_csr_via_coo,
+    ("csr", "spmm"): ops.spmm_csr_via_coo,
+}
 
-def run(scale: float = 0.04) -> List[Row]:
-    suite = paper_suite(scale=scale,
-                        include=["chem_master1", "xenon1", "memplus",
-                                 "sme3Da"])
+
+def _interleaved(fa: Callable[[], None], fb: Callable[[], None],
+                 iters: int) -> Tuple[float, float]:
+    """Per-path best-of with A/B interleaving — slow drift (GC, noisy
+    neighbours) hits both paths equally instead of whichever ran second."""
+    fa()
+    fb()
+    ta = tb = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fa()
+        ta = min(ta, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fb()
+        tb = min(tb, time.perf_counter() - t0)
+    return ta, tb
+
+
+def run(scale: float = 0.01, iters: int = 3, batch: int = 8,
+        plan: Optional[Tuple] = None) -> List[Row]:
+    plan = plan or BENCH_PLAN
+    suite = dict(paper_suite(scale=scale,
+                             include=[name for name, _ in plan]))
+    tuner = KernelTuner(interpret=True, iters=iters, warmup=1)
     rows: List[Row] = []
-    for name, csr in suite:
+    for mat_name, formats in plan:
+        csr = suite[mat_name]
         stats = MatrixStats.of(csr)
-        ell = host_csr_to_ell(csr)
-        x = jnp.ones((csr.n_cols,), jnp.float32)
-        t_ref = time_fn(jax.jit(spmv), ell, x, iters=3)
-        d = jnp.asarray(ell.data)
-        c = jnp.asarray(ell.cols)
-        y_kernel = ops.ell_spmv_raw(d, c, x, interpret=True)
-        y_ref = ref.ell_spmv_ref(d, c, x)
-        err = float(jnp.max(jnp.abs(y_kernel - y_ref)))
-        # static accounting: ELL bytes/flops per SpMV
-        padded = ell.n_rows * ell.width
-        bytes_moved = padded * (4 + 4) + csr.n_cols * 4 + ell.n_rows * 4
-        flops = 2 * padded
-        rows.append(Row(
-            name=f"kernels/ell_spmv/{name}",
-            us_per_call=t_ref * 1e6,
-            derived={"kernel_vs_ref_maxerr": f"{err:.2e}",
-                     "bytes": bytes_moved, "flops": flops,
-                     "tpu_mem_bound_us":
-                         f"{bytes_moved / 819e9 * 1e6:.2f}",
-                     "d_mat": f"{stats.d_mat:.3f}"}))
+        for op in ("spmv", "spmm"):
+            if op == "spmv":
+                x = jnp.ones((csr.n_cols,), jnp.float32)
+            else:
+                x = jnp.ones((csr.n_cols, batch), jnp.float32)
+            for fmt in formats:
+                obj = TRANSFORMS_HOST[fmt](csr)
+                impl = dispatch.get_impl(fmt, op, tier="kernel",
+                                         fallback=False)
+                rec = tuner.tune(obj, op=op, batch=(1 if op == "spmv"
+                                                    else batch),
+                                 impl=impl, stats=stats)
+                derived = {
+                    "d_mat": f"{stats.d_mat:.3f}",
+                    "t_default_us": f"{rec.t_default * 1e6:.1f}",
+                    "tuned_speedup": f"{rec.speedup:.3f}",
+                    "geometry": json.dumps(rec.geometry.to_dict()),
+                }
+                if op == "spmm":
+                    derived["batch"] = batch
+                base = LEGACY_BASELINES.get((fmt, op))
+                if base is not None:
+                    jb = jax.jit(lambda m, v, _f=base:
+                                 _f(m, v, interpret=True))
+                    jn = jax.jit(lambda m, v, _f=impl, _g=rec.geometry:
+                                 _f(m, v, interpret=True, tuning=_g))
+                    t_coo, t_native = _interleaved(
+                        lambda: jax.block_until_ready(jb(obj, x)),
+                        lambda: jax.block_until_ready(jn(obj, x)),
+                        max(iters, 6))
+                    derived["t_via_coo_us"] = f"{t_coo * 1e6:.1f}"
+                    derived["native_vs_coo"] = f"{t_coo / t_native:.3f}"
+                rows.append(Row(name=f"kernels/{fmt}_{op}/{mat_name}",
+                                us_per_call=rec.t_best * 1e6,
+                                derived=derived))
+        # numerical sanity against the pure-jnp oracle (ELL), kept from the
+        # original benchmark so the section still guards kernel parity
+        if "ell_row" in formats:
+            ell = host_csr_to_ell(csr)
+            x1 = jnp.ones((csr.n_cols,), jnp.float32)
+            d, c = jnp.asarray(ell.data), jnp.asarray(ell.cols)
+            err = float(jnp.max(jnp.abs(
+                ops.ell_spmv_raw(d, c, x1, interpret=True) -
+                ref.ell_spmv_ref(d, c, x1))))
+            t_ref = time_fn(jax.jit(spmv), ell, x1, iters=iters)
+            rows.append(Row(name=f"kernels/ell_ref/{mat_name}",
+                            us_per_call=t_ref * 1e6,
+                            derived={"kernel_vs_ref_maxerr": f"{err:.2e}",
+                                     "d_mat": f"{stats.d_mat:.3f}"}))
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced plan / few iters (CI smoke)")
+    ap.add_argument("--scale", type=float, default=None)
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--json", default=None, help="also dump rows as JSON")
+    args = ap.parse_args()
+    scale = args.scale if args.scale is not None else 0.01
+    iters = args.iters if args.iters is not None else (1 if args.quick else 3)
+    plan = (("torso1", ("csr",)),
+            ("chem_master1", ("ell_row", "coo_row"))) if args.quick else None
+    rows = run(scale=scale, iters=iters, batch=args.batch, plan=plan)
+    from .common import print_rows
+    print_rows(rows)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([{"name": r.name, "us_per_call": r.us_per_call,
+                        **r.derived} for r in rows], f, indent=1)
+    bad = [r.name for r in rows
+           if float(r.derived.get("tuned_speedup", 1)) < 1.0]
+    assert not bad, f"tuned geometry slower than default: {bad}"
+
+
+if __name__ == "__main__":
+    main()

@@ -15,5 +15,7 @@ from .spmv import (spmm, spmv, spmv_bcsr, spmv_ccs, spmv_coo, spmv_csr,
 from .autotune import (AutoTunedSpMV, Decision, MachineModel, TuningDB,
                        decide_cost_model, decide_generalized, decide_paper,
                        offline_phase, time_fn)
+from .kernel_tune import (GeometryRecord, KernelTuner, TileGeometry,
+                          candidate_geometries, nearest_geometry)
 from .suite import TABLE1, paper_suite, synthesize, verify_suite
 from .policy import MemoryPolicy

@@ -33,7 +33,7 @@ from __future__ import annotations
 import json
 import time
 from dataclasses import asdict, dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -100,11 +100,17 @@ class OfflineRecord:
 
 @dataclass
 class TuningDB:
-    """The machine-specific product of the off-line phase."""
+    """The machine-specific product of the off-line phase.
+
+    ``geometries`` holds the kernel launch-geometry winners recorded by
+    ``core.kernel_tune.KernelTuner`` — persisted alongside the
+    ``OfflineRecord``\\s so one file ships both halves of the auto-tuning
+    state (format thresholds *and* launch geometry)."""
     machine: str
     c: float
     records: List[OfflineRecord]
     d_star: Dict[str, float]          # per format
+    geometries: List = field(default_factory=list)  # GeometryRecord
 
     # -- persistence ---------------------------------------------------------
     def to_json(self) -> str:
@@ -116,17 +122,31 @@ class TuningDB:
                  "formats": {f: asdict(m) for f, m in r.formats.items()}}
                 for r in self.records
             ],
+            "geometries": [g.to_dict() for g in self.geometries],
         }, indent=1)
 
     @staticmethod
     def from_json(s: str) -> "TuningDB":
+        from .kernel_tune import GeometryRecord
         obj = json.loads(s)
         recs = []
         for r in obj["records"]:
             fmts = {f: FormatMeasurement(**m) for f, m in r.pop("formats").items()}
             recs.append(OfflineRecord(**r, formats=fmts))
+        geoms = [GeometryRecord.from_dict(g)
+                 for g in obj.get("geometries", [])]
         return TuningDB(machine=obj["machine"], c=obj["c"], records=recs,
-                        d_star=obj["d_star"])
+                        d_star=obj["d_star"], geometries=geoms)
+
+    # -- tuned launch geometry ----------------------------------------------
+    def best_geometry(self, fmt: str, d_mat: float, op: str = "spmv",
+                      batch: Optional[int] = None):
+        """Nearest recorded launch-geometry winner for an unseen matrix
+        (D_mat-keyed, preferring batch-matched records); None if nothing
+        was recorded for (fmt, op)."""
+        from .kernel_tune import nearest_geometry
+        return nearest_geometry(self.geometries, fmt, op, d_mat=d_mat,
+                                batch=batch)
 
     def save(self, path: str) -> None:
         with open(path, "w") as f:
@@ -192,6 +212,7 @@ def offline_phase(
     make_x: Optional[Callable[[CSR], jax.Array]] = None,
     batch: int = 1,
     spmm_impls: Optional[Dict[str, Callable]] = None,
+    tuner: Optional[Any] = None,
 ) -> TuningDB:
     """Measure the suite, build the D_mat–R graph, learn D* per format.
 
@@ -206,6 +227,13 @@ def offline_phase(
     products.  Records carry the batch they were measured at.  With
     ``batch > 1`` overrides come from ``spmm_impls`` (callables taking the
     panel); ``spmv_impls`` is SpMV-only and is ignored then.
+
+    ``tuner``: a ``core.kernel_tune.KernelTuner``.  When given (with kernel
+    impls), every format whose impl was overridden is launch-geometry-tuned
+    on each matrix *before* it is timed, so the measured ``t_f`` (and
+    ``t_crs``) are post-tuning speeds — the ``k * B * (t_crs - t_f) >
+    t_trans`` rule then sees what the serving path will actually run.  The
+    tuner's winners ship in the returned db's ``geometries``.
     """
     import jax.numpy as jnp
 
@@ -215,7 +243,22 @@ def offline_phase(
             "offline_phase(batch > 1) times the SpMM path; pass the panel "
             "callables via spmm_impls (spmv_impls is SpMV-only)")
     default_op = spmv if batch == 1 else spmm
+    op_name = "spmv" if batch == 1 else "spmm"
     impls = (spmv_impls if batch == 1 else spmm_impls) or {}
+
+    def tuned(fn, fmt_obj, stats, x):
+        """Bind the per-matrix tuned launch geometry onto an overridden
+        kernel impl (reference impls take no geometry and pass through)."""
+        if tuner is None:
+            return fn
+        import functools
+        try:
+            rec = tuner.tune(fmt_obj, op=op_name, batch=batch, impl=fn,
+                             x=x, stats=stats)
+        except (KeyError, TypeError):
+            return fn
+        return functools.partial(fn, tuning=rec.geometry)
+
     records: List[OfflineRecord] = []
     for name, csr in suite:
         stats = MatrixStats.of(csr)
@@ -226,6 +269,8 @@ def offline_phase(
         else:
             x = jnp.ones((csr.n_cols, batch), jnp.float32)
         csr_fn = impls.get("csr", default_op)
+        if "csr" in impls:
+            csr_fn = tuned(csr_fn, csr, stats, x)
         jit_csr = jax.jit(lambda m, v, fn=csr_fn: fn(m, v))
         t_crs = time_fn(jit_csr, csr, x, iters=iters)
         rec = OfflineRecord(name=name, n=stats.n, nnz=stats.nnz, mu=stats.mu,
@@ -237,6 +282,8 @@ def offline_phase(
             t_trans = time_host(trans, csr)
             fmt_obj = trans(csr)
             f_fn = impls.get(f, default_op)
+            if f in impls:
+                f_fn = tuned(f_fn, fmt_obj, stats, x)
             jit_f = jax.jit(lambda m, v, fn=f_fn: fn(m, v))
             t_f = time_fn(jit_f, fmt_obj, x, iters=iters)
             sp = t_crs / t_f
@@ -253,7 +300,9 @@ def offline_phase(
         qual = [r.d_mat for r in records
                 if f in r.formats and r.formats[f].r >= c]
         d_star[f] = max(qual) if qual else 0.0
-    return TuningDB(machine=machine, c=c, records=records, d_star=d_star)
+    return TuningDB(machine=machine, c=c, records=records, d_star=d_star,
+                    geometries=list(tuner.records) if tuner is not None
+                    else [])
 
 
 # ---------------------------------------------------------------------------

@@ -91,21 +91,31 @@ def format_of(obj: Any) -> str:
     raise TypeError(f"unknown sparse format: {type(obj)}")
 
 
+def resolve_impl(fmt: str, op: str = "spmv", tier: str = "reference",
+                 fallback: bool = True) -> Tuple[Callable, str]:
+    """Like :func:`get_impl` but also reports which tier actually resolved
+    — callers attaching kernel-only arguments (the ``tuning=`` launch
+    geometry) must know whether the fallback landed on the reference tier."""
+    _ensure_loaded(tier)
+    fn = _IMPLS.get((fmt, op, tier))
+    if fn is not None:
+        return fn, tier
+    if fallback and tier != "reference":
+        _ensure_loaded("reference")
+        fn = _IMPLS.get((fmt, op, "reference"))
+        if fn is not None:
+            return fn, "reference"
+    raise KeyError(f"no {tier} implementation registered for "
+                   f"({fmt!r}, {op!r})")
+
+
 def get_impl(fmt: str, op: str = "spmv", tier: str = "reference",
              fallback: bool = True) -> Callable:
     """Implementation for ``(fmt, op)`` at ``tier``.
 
     ``fallback=True`` lets a missing kernel-tier entry resolve to the
     reference tier (not every format has a Pallas kernel)."""
-    _ensure_loaded(tier)
-    fn = _IMPLS.get((fmt, op, tier))
-    if fn is None and fallback and tier != "reference":
-        _ensure_loaded("reference")
-        fn = _IMPLS.get((fmt, op, "reference"))
-    if fn is None:
-        raise KeyError(f"no {tier} implementation registered for "
-                       f"({fmt!r}, {op!r})")
-    return fn
+    return resolve_impl(fmt, op, tier, fallback)[0]
 
 
 def has_impl(fmt: str, op: str = "spmv", tier: str = "reference") -> bool:
@@ -147,22 +157,31 @@ def impl_table(op: str = "spmv", tier: str = "reference",
 # dispatch
 # ---------------------------------------------------------------------------
 def dispatch(obj: Any, x, op: str = "spmv", tier: str = "reference",
-             **kw):
-    """Resolve ``obj``'s format and apply its ``op`` implementation."""
-    return get_impl(format_of(obj), op, tier)(obj, x, **kw)
+             tuning: Any = None, **kw):
+    """Resolve ``obj``'s format and apply its ``op`` implementation.
+
+    ``tuning`` is the per-call launch-geometry hint (a
+    ``core.kernel_tune.TileGeometry``, or a ``{format: TileGeometry}`` dict
+    for the hybrid container); it is forwarded only when the lookup lands
+    on the kernel tier — reference implementations have no launch geometry
+    and a kernel-tier request may legitimately fall back to one."""
+    fn, found = resolve_impl(format_of(obj), op, tier)
+    if tuning is not None and found == "kernel":
+        kw["tuning"] = tuning
+    return fn(obj, x, **kw)
 
 
-def spmv(m, x, tier: str = "reference"):
-    return dispatch(m, x, op="spmv", tier=tier)
+def spmv(m, x, tier: str = "reference", tuning: Any = None):
+    return dispatch(m, x, op="spmv", tier=tier, tuning=tuning)
 
 
-def spmm(m, x, tier: str = "reference"):
+def spmm(m, x, tier: str = "reference", tuning: Any = None):
     if getattr(x, "ndim", 2) != 2:
         raise ValueError(f"spmm expects x of shape (n_cols, B); got "
                          f"{getattr(x, 'shape', None)}")
-    return dispatch(m, x, op="spmm", tier=tier)
+    return dispatch(m, x, op="spmm", tier=tier, tuning=tuning)
 
 
 __all__ = ["OPS", "TIERS", "register_format", "register_impl", "format_of",
-           "get_impl", "has_impl", "registered_formats", "impl_table",
-           "dispatch", "spmv", "spmm"]
+           "get_impl", "resolve_impl", "has_impl", "registered_formats",
+           "impl_table", "dispatch", "spmv", "spmm"]

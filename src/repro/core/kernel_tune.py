@@ -1,0 +1,408 @@
+"""Kernel launch-geometry auto-tuning: extend AT from format choice down to
+the hot loop.
+
+The paper's auto-tuner stops at *format selection*; the Pallas tier then
+used to launch every kernel with one hard-coded tile shape.  AlphaSparse
+(arXiv:2212.10432) shows per-matrix design-space search over launch
+parameters dominates any single fixed schedule, and SELL-C-sigma
+(arXiv:1307.6209) shows tile/chunk geometry is the decisive knob on
+wide-SIMD hardware.  This module is the launch-parameter half of that
+argument for our stack:
+
+  * :class:`TileGeometry` — the knobs every kernel wrapper in
+    ``kernels/ops.py`` accepts per call (``tuning=``): ``block_rows`` /
+    ``block_w`` (ELL band tiles, BCSR row tiles), ``block_k`` (SpMM RHS
+    tile), ``block_nnz`` (COO/CSR nnz slab) and ``slabs_per_block`` (the
+    CSR/BCSR static slab-coverage bound — data-dependent, so only the
+    tuner, holding the concrete matrix, can supply it to traced callers);
+  * :func:`candidate_geometries` — the bounded per-(format, op) search
+    grid (``block_rows in {8..512}``, ``block_w in {8,128,256}``, ...);
+  * :class:`KernelTuner` — times real launches per candidate, memoizes the
+    winner per ``(format, op, batch, matrix profile)``, records into the
+    existing :class:`~repro.core.autotune.TuningDB` (persisted next to the
+    ``OfflineRecord``\\s), and answers unseen matrices with a
+    D_mat-keyed nearest-neighbour fallback.
+
+The timing loop is injectable (``timer=``) so tests tune deterministically
+without a clock.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import asdict, dataclass, replace
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from . import dispatch as _dispatch
+from .formats import CSR, MatrixStats
+
+__all__ = [
+    "TileGeometry", "GeometryRecord", "candidate_geometries",
+    "nearest_geometry", "KernelTuner",
+]
+
+
+# ---------------------------------------------------------------------------
+# the geometry pytree-of-knobs
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TileGeometry:
+    """Per-call launch geometry; ``None`` fields fall back to the wrapper's
+    built-in default.  Hashable so it can ride through static closures."""
+    block_rows: Optional[int] = None   # ELL/CSR row tile; BCSR block-row tile
+    block_w: Optional[int] = None      # ELL band (lane) tile
+    block_k: Optional[int] = None      # SpMM right-hand-side tile
+    block_nnz: Optional[int] = None    # COO/CSR nnz slab; BCSR blocks/slab
+    slabs_per_block: Optional[int] = None  # CSR/BCSR static coverage bound
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {k: v for k, v in asdict(self).items() if v is not None}
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "TileGeometry":
+        return TileGeometry(**d)
+
+    def without_slab_bound(self) -> "TileGeometry":
+        """Strip the data-dependent coverage bound — required when a
+        geometry learned on one matrix is applied to another under trace
+        (the bound would silently drop entries; without it the CSR/BCSR
+        kernels fall back to the always-correct full sweep, and concrete
+        callers recompute the exact bound anyway)."""
+        return replace(self, slabs_per_block=None)
+
+
+@dataclass
+class GeometryRecord:
+    """One tuning outcome: the winning geometry for (format, op, batch) on
+    a matrix profile, plus the measured win over the default launch.
+
+    ``sig`` fingerprints the index structure (CRC of the pointer array)
+    when it was concrete at tune time: two same-sized matrices must not
+    share a memoized record, because the winning geometry can carry a
+    matrix-specific slab-coverage bound."""
+    fmt: str
+    op: str
+    batch: int
+    n: int
+    nnz: int
+    d_mat: float
+    geometry: TileGeometry
+    t_best: float
+    t_default: float
+    sig: int = 0
+
+    @property
+    def speedup(self) -> float:
+        return self.t_default / self.t_best if self.t_best > 0 else 1.0
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = asdict(self)
+        d["geometry"] = self.geometry.to_dict()
+        return d
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "GeometryRecord":
+        d = dict(d)
+        d["geometry"] = TileGeometry.from_dict(d["geometry"])
+        return GeometryRecord(**d)
+
+
+# ---------------------------------------------------------------------------
+# the bounded search grid
+# ---------------------------------------------------------------------------
+ROW_TILES = (8, 32, 128, 256, 512)
+W_TILES = (8, 128, 256)
+K_TILES = (8, 128)
+NNZ_TILES = (1024, 4096, 16384, 65536)
+CSR_ROW_TILES = (64, 128, 256, 512)
+CSR_NNZ_TILES = (1024, 4096, 16384, 65536)
+BCSR_ROW_TILES = (8, 32, 64)
+BCSR_NNZ_TILES = (128, 512, 2048)
+# the whole-nnz "one slab" boundary candidate is capped so a slab's VAL +
+# ICOL stay ~2 MiB — comfortably inside VMEM next to the pinned x
+MAX_SLAB = 262144
+MAX_BLOCK_SLAB = 8192
+
+
+def _align8(n: int) -> int:
+    return max(8, 8 * ((int(n) + 7) // 8))
+
+
+def _nnz_tiles(base, nnz_pad: int, cap: int):
+    """Slab-size candidates: the base grid clamped to the matrix, plus the
+    whole-nnz single-slab boundary (itself clamped to the VMEM cap)."""
+    if not nnz_pad:
+        return sorted(base)
+    whole = min(_align8(nnz_pad), cap)
+    return sorted({min(bn, whole) for bn in base} | {whole})
+
+
+def candidate_geometries(fmt: str, op: str = "spmv", *, n_rows: int = 0,
+                         width: int = 0, nnz_pad: int = 0,
+                         batch: int = 1) -> List[TileGeometry]:
+    """The bounded launch-geometry grid for one (format, op).
+
+    Candidates are pre-clamped to the matrix profile (a 512-row tile on a
+    100-row matrix is the same launch as a 128-row one) and de-duplicated,
+    so the tuner never times the same effective launch twice."""
+    ks = tuple(sorted({min(k, _align8(batch)) for k in K_TILES})) \
+        if op == "spmm" else (None,)
+    geoms: List[TileGeometry] = []
+    if fmt.startswith("ell") or fmt == "sell":
+        rows = {min(r, _align8(n_rows)) for r in ROW_TILES} if n_rows \
+            else set(ROW_TILES)
+        ws = {min(w, _align8(width)) for w in W_TILES} if width \
+            else set(W_TILES)
+        for r in sorted(rows):
+            for w in sorted(ws):
+                for k in ks:
+                    geoms.append(TileGeometry(block_rows=r, block_w=w,
+                                              block_k=k))
+    elif fmt.startswith("coo"):
+        for bn in _nnz_tiles(NNZ_TILES, nnz_pad, MAX_SLAB):
+            for k in ks:
+                geoms.append(TileGeometry(block_nnz=bn, block_k=k))
+    elif fmt == "csr":
+        rows = {min(r, _align8(n_rows)) for r in CSR_ROW_TILES} if n_rows \
+            else set(CSR_ROW_TILES)
+        if n_rows:
+            # the single-row-block boundary (output tile capped for VMEM)
+            rows.add(min(_align8(n_rows), MAX_SLAB))
+        for r in sorted(rows):
+            for bn in _nnz_tiles(CSR_NNZ_TILES, nnz_pad, MAX_SLAB):
+                for k in ks:
+                    geoms.append(TileGeometry(block_rows=r, block_nnz=bn,
+                                              block_k=k))
+    elif fmt == "bcsr":
+        rows = {min(r, max(1, n_rows)) for r in BCSR_ROW_TILES} if n_rows \
+            else set(BCSR_ROW_TILES)
+        bns = set(_nnz_tiles(BCSR_NNZ_TILES, nnz_pad, MAX_BLOCK_SLAB))
+        for r in sorted(rows):
+            for bn in sorted(bns):
+                for k in ks:
+                    geoms.append(TileGeometry(block_rows=r, block_nnz=bn,
+                                              block_k=k))
+    else:
+        return []
+    seen, out = set(), []
+    for g in geoms:
+        key = (g.block_rows, g.block_w, g.block_k, g.block_nnz)
+        if key not in seen:
+            seen.add(key)
+            out.append(g)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# nearest-neighbour fallback over recorded geometries
+# ---------------------------------------------------------------------------
+def nearest_geometry(records: Sequence[GeometryRecord], fmt: str,
+                     op: str = "spmv", d_mat: float = 0.0,
+                     batch: Optional[int] = None) -> Optional[TileGeometry]:
+    """D_mat-keyed (log-space) nearest neighbour among recorded winners.
+
+    The returned geometry is stripped of its slab-coverage bound — that
+    bound is only valid for the matrix it was measured on."""
+    recs = [r for r in records if r.fmt == fmt and r.op == op]
+    if batch is not None:
+        exact = [r for r in recs if r.batch == batch]
+        recs = exact or recs
+    if not recs:
+        return None
+    q = np.log(max(d_mat, 1e-9))
+    best = min(recs, key=lambda r: abs(np.log(max(r.d_mat, 1e-9)) - q))
+    return best.geometry.without_slab_bound()
+
+
+# ---------------------------------------------------------------------------
+# matrix profiling (best effort per format)
+# ---------------------------------------------------------------------------
+def _structure_sig(obj: Any) -> int:
+    """CRC fingerprint of the concrete index-pointer structure (0 when the
+    object has none, or it is abstract).  Part of the memo identity: the
+    winning geometry's slab-coverage bound is only valid for the exact
+    structure it was measured on."""
+    ip = getattr(obj, "indptr", None)
+    if ip is None or isinstance(ip, jax.core.Tracer):
+        return 0
+    import zlib
+    return zlib.crc32(np.ascontiguousarray(np.asarray(ip)).tobytes()) or 1
+
+
+def _profile_of(obj: Any, stats: Optional[MatrixStats] = None
+                ) -> Tuple[int, int, float, int]:
+    sig = _structure_sig(obj)
+    if stats is not None:
+        return int(stats.n), int(stats.nnz), float(stats.d_mat), sig
+    n = int(getattr(obj, "n_rows", 0))
+    nnz = int(getattr(obj, "nnz", 0))
+    d_mat = 0.0
+    if isinstance(obj, CSR):
+        ip = getattr(obj, "indptr", None)
+        if ip is not None and not isinstance(ip, jax.core.Tracer):
+            d_mat = float(MatrixStats.of(obj).d_mat)
+    return n, nnz, d_mat, sig
+
+
+def _width_of(obj: Any) -> int:
+    w = getattr(obj, "width", None)
+    if w is not None:
+        return int(w)
+    widths = getattr(obj, "widths", None)   # BucketedELL
+    if widths:
+        return int(max(widths))
+    return 0
+
+
+def _slab_bound_for(obj: Any, g: TileGeometry) -> Optional[int]:
+    """Exact slab coverage bound for a CSR/BCSR candidate, computable only
+    with the concrete index structure in hand."""
+    ip = getattr(obj, "indptr", None)
+    if ip is None or isinstance(ip, jax.core.Tracer):
+        return None
+    from repro.kernels.csr_spmv import slabs_needed
+    br = g.block_rows or (256 if isinstance(obj, CSR) else 32)
+    bn = g.block_nnz or (2048 if isinstance(obj, CSR) else 512)
+    return slabs_needed(np.asarray(ip), br, bn)
+
+
+# ---------------------------------------------------------------------------
+# the tuner
+# ---------------------------------------------------------------------------
+def _real_timer(iters: int, warmup: int) -> Callable:
+    def timer(thunk: Callable[[], Any], geometry: Optional[TileGeometry]
+              ) -> float:
+        for _ in range(warmup):
+            thunk()
+        best = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            thunk()
+            best = min(best, time.perf_counter() - t0)
+        return best
+    return timer
+
+
+class KernelTuner:
+    """Searches :func:`candidate_geometries` by timing real launches.
+
+    ``db``: an :class:`~repro.core.autotune.TuningDB` to read/record
+    geometry winners in (its ``geometries`` list is shared, so saving the
+    db persists the tuner's work).  ``timer(thunk, geometry) -> seconds``
+    is injectable for deterministic tests.
+    """
+
+    def __init__(self, db: Optional[Any] = None,
+                 interpret: Optional[bool] = None,
+                 iters: int = 3, warmup: int = 1,
+                 timer: Optional[Callable] = None,
+                 max_candidates: Optional[int] = None):
+        self.db = db
+        self.interpret = interpret
+        self.records: List[GeometryRecord] = (
+            db.geometries if db is not None
+            and getattr(db, "geometries", None) is not None else [])
+        if db is not None and getattr(db, "geometries", None) is None:
+            db.geometries = self.records
+        self._timer = timer or _real_timer(iters, warmup)
+        self.max_candidates = max_candidates
+        self._memo: Dict[Tuple, GeometryRecord] = {
+            self._key(r.fmt, r.op, r.batch, (r.n, r.nnz, r.d_mat, r.sig)): r
+            for r in self.records}
+
+    @staticmethod
+    def _key(fmt: str, op: str, batch: int,
+             profile: Tuple[int, int, float, int]):
+        return (fmt, op, batch, profile[0], profile[1],
+                round(profile[2], 6), profile[3])
+
+    # -- search --------------------------------------------------------------
+    def tune(self, obj: Any, op: str = "spmv", batch: int = 1,
+             impl: Optional[Callable] = None, x: Optional[jax.Array] = None,
+             stats: Optional[MatrixStats] = None,
+             force: bool = False) -> GeometryRecord:
+        """Time every candidate launch of ``obj``'s kernel and return (and
+        memoize) the winner.  The default launch is always a candidate, so
+        ``t_best <= t_default`` by construction."""
+        import jax.numpy as jnp
+
+        fmt = _dispatch.format_of(obj)
+        profile = _profile_of(obj, stats)
+        key = self._key(fmt, op, batch, profile)
+        if not force and key in self._memo:
+            return self._memo[key]
+
+        if impl is None:
+            impl = _dispatch.get_impl(fmt, op, tier="kernel", fallback=False)
+        if x is None:
+            shape = (obj.n_cols,) if op == "spmv" else (obj.n_cols,
+                                                        max(batch, 1))
+            x = jnp.ones(shape, jnp.float32)
+
+        cands: List[Optional[TileGeometry]] = [None]
+        # BCSR row tiles count *block* rows; everything else scalar rows
+        grid_rows = int(getattr(obj, "n_block_rows", profile[0]) or 0)
+        grid = candidate_geometries(
+            fmt, op, n_rows=grid_rows, width=_width_of(obj),
+            nnz_pad=int(getattr(obj, "nnz_pad",
+                                getattr(obj, "nblocks_pad", 0)) or 0),
+            batch=batch)
+        if self.max_candidates is not None:
+            grid = grid[: self.max_candidates]
+        cands.extend(grid)
+
+        times: List[Tuple[float, Optional[TileGeometry]]] = []
+        for g in cands:
+            gg = g
+            if g is not None and fmt in ("csr", "bcsr"):
+                spb = _slab_bound_for(obj, g)
+                if spb is not None:
+                    gg = replace(g, slabs_per_block=spb)
+            fn = jax.jit(lambda m, v, _f=impl, _g=gg:
+                         _f(m, v, interpret=self.interpret, tuning=_g))
+            thunk = lambda _fn=fn: jax.block_until_ready(_fn(obj, x))
+            times.append((float(self._timer(thunk, gg)), gg))
+
+        t_default = times[0][0]
+        t_best, best_g = min(times, key=lambda tg: tg[0])
+        rec = GeometryRecord(
+            fmt=fmt, op=op, batch=max(batch, 1), n=profile[0],
+            nnz=profile[1], d_mat=profile[2], sig=profile[3],
+            geometry=best_g if best_g is not None else TileGeometry(),
+            t_best=t_best, t_default=t_default)
+        self._memo[key] = rec
+        self.records.append(rec)
+        return rec
+
+    # -- lookup --------------------------------------------------------------
+    def best(self, obj: Any = None, op: str = "spmv", batch: int = 1,
+             fmt: Optional[str] = None, d_mat: Optional[float] = None,
+             stats: Optional[MatrixStats] = None
+             ) -> Optional[TileGeometry]:
+        """Memoized winner for this exact profile, else the D_mat-keyed
+        nearest-neighbour among recorded winners (slab bound stripped),
+        else ``None`` (caller uses the default launch)."""
+        if obj is not None:
+            fmt = fmt or _dispatch.format_of(obj)
+            profile = _profile_of(obj, stats)
+            rec = self._memo.get(self._key(fmt, op, max(batch, 1), profile))
+            if rec is not None:
+                return rec.geometry
+            if d_mat is None:
+                d_mat = profile[2]
+        if fmt is None:
+            raise ValueError("best() needs a matrix object or a format name")
+        return nearest_geometry(self.records, fmt, op,
+                                d_mat=d_mat or 0.0, batch=max(batch, 1))
+
+    # -- binding helpers -----------------------------------------------------
+    def bind(self, impls: Dict[str, Callable],
+             tunings: Dict[str, TileGeometry]) -> Dict[str, Callable]:
+        """``{fmt: impl}`` with each format's tuned geometry partially
+        applied (formats without a tuned geometry pass through)."""
+        import functools
+        return {f: (functools.partial(fn, tuning=tunings[f])
+                    if f in tunings else fn)
+                for f, fn in impls.items()}

@@ -1,0 +1,182 @@
+"""BCSR block-tiled SpMV / SpMM Pallas TPU kernels.
+
+BCSR is the paper's named future work ("transformation to other formats,
+such as BCSR, which enables cache blocking").  Storage is ``b x b`` dense
+blocks in CSR order over block rows; on TPU each stored block is a small
+dense tile, so SpMV becomes a stream of tiny dense matvecs (einsum over the
+tile axes — MXU/VPU work, no per-scalar gather) and the "cache blocking"
+the paper anticipates maps onto VMEM slabs.
+
+Launch structure mirrors ``csr_spmv`` one level up, over *block* rows:
+
+  * grid = (block_row_tiles, slabs_per_tile) (SpMM adds a parallel k axis);
+  * a tile of ``rows_per_tile`` block rows owns a private
+    ``(rows_per_tile * b,)`` output strip — tiles are parallel;
+  * the tile's stored blocks are contiguous in the block-CSR order, so slab
+    placement is scalar-prefetched from the block IRP
+    (``slab_start[i] = IRP[i*rpt] // block_nnz``), with the same
+    full-sweep fallback when no static slab bound is available;
+  * within a slab each stored block's local block row comes from the IRP
+    window compare-count, and the ``(slab, b)`` matvec results scatter-add
+    into the strip.
+
+Pad blocks (beyond IRP[-1]) are all-zero and fall outside every window.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .csr_spmv import (_local_rows, _row_windows, _slab_schedule,
+                       slabs_needed)
+
+__all__ = ["bcsr_spmv", "bcsr_spmm", "slabs_needed"]
+
+
+def _pad_block_slabs(a: jax.Array, n_slabs: int, block_nnz: int) -> jax.Array:
+    target = n_slabs * block_nnz
+    if a.shape[0] < target:
+        pads = [(0, target - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+        a = jnp.pad(a, pads)
+    return a
+
+
+def _gather_x_blocks(x_ref, bc: jax.Array, b: int) -> jax.Array:
+    """(slab, b) slices of the x vector addressed by block column."""
+    idx = bc[:, None] * b + jax.lax.broadcasted_iota(jnp.int32, (1, b), 1)
+    return x_ref[...].astype(jnp.float32)[idx]
+
+
+def _bcsr_spmv_kernel(interpret, masked, slab_ref, data_ref, bcols_ref,
+                      win_ref, x_ref, y_ref):
+    i, j = pl.program_id(0), pl.program_id(1)
+    bn = data_ref.shape[0]
+    b = data_ref.shape[1]
+    lrow, valid = _local_rows(win_ref[0, :], (slab_ref[i] + j) * bn, bn,
+                              jnp.int32, interpret, masked)
+    xg = _gather_x_blocks(x_ref, bcols_ref[...], b)           # (bn, b)
+    tiles = jnp.einsum("pij,pj->pi", data_ref[...].astype(jnp.float32), xg)
+    if valid is not None:
+        tiles = jnp.where(valid[:, None], tiles, 0.0)         # (bn, b)
+    rows = lrow[:, None] * b + jax.lax.broadcasted_iota(jnp.int32, (1, b), 1)
+    partial = jnp.zeros_like(y_ref).at[rows.reshape(-1)].add(
+        tiles.reshape(-1))
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        y_ref[...] = y_ref[...] + partial
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_tile", "block_nnz",
+                                             "slabs_per_block", "interpret"))
+def bcsr_spmv(data: jax.Array, block_cols: jax.Array, indptr: jax.Array,
+              x: jax.Array, *, rows_per_tile: int = 32, block_nnz: int = 512,
+              slabs_per_block: int = 0, interpret: bool = True) -> jax.Array:
+    """y = A @ x, A in BCSR: data (nblocks_pad, b, b), block IRP
+    (n_block_rows + 1,), x padded to a multiple of b.  Returns
+    (n_block_rows * b,) float32 (callers slice to n_rows)."""
+    nbr = indptr.shape[0] - 1
+    b = data.shape[1]
+    r = -(-nbr // rows_per_tile)
+    total = -(-data.shape[0] // block_nnz)
+    spb, slab_start = _slab_schedule(indptr, r, rows_per_tile, block_nnz,
+                                     total, slabs_per_block)
+    win = _row_windows(indptr, nbr, rows_per_tile)
+    data = _pad_block_slabs(data, total, block_nnz)
+    block_cols = _pad_block_slabs(block_cols, total, block_nnz)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r, spb),
+        in_specs=[
+            pl.BlockSpec((block_nnz, b, b), lambda i, j, s: (s[i] + j, 0, 0)),
+            pl.BlockSpec((block_nnz,), lambda i, j, s: (s[i] + j,)),
+            pl.BlockSpec((1, rows_per_tile + 1), lambda i, j, s: (i, 0)),
+            pl.BlockSpec(x.shape, lambda i, j, s: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_tile * b,), lambda i, j, s: (i,)),
+    )
+    y = pl.pallas_call(
+        functools.partial(_bcsr_spmv_kernel, interpret, r > 1),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r * rows_per_tile * b,), jnp.float32),
+        interpret=interpret,
+    )(slab_start.astype(jnp.int32), data, block_cols, win, x)
+    return y[: nbr * b]
+
+
+def _bcsr_spmm_kernel(interpret, masked, slab_ref, data_ref, bcols_ref,
+                      win_ref, x_ref, y_ref):
+    i, j = pl.program_id(0), pl.program_id(2)
+    bn = data_ref.shape[0]
+    b = data_ref.shape[1]
+    lrow, valid = _local_rows(win_ref[0, :], (slab_ref[i] + j) * bn, bn,
+                              jnp.int32, interpret, masked)
+    idx = (bcols_ref[...][:, None] * b +
+           jax.lax.broadcasted_iota(jnp.int32, (1, b), 1))
+    xg = x_ref[...].astype(jnp.float32)[idx, :]               # (bn, b, bk)
+    tiles = jnp.einsum("pij,pjc->pic", data_ref[...].astype(jnp.float32), xg)
+    if valid is not None:
+        tiles = jnp.where(valid[:, None, None], tiles, 0.0)
+    rows = lrow[:, None] * b + jax.lax.broadcasted_iota(jnp.int32, (1, b), 1)
+    partial = jnp.zeros_like(y_ref).at[rows.reshape(-1), :].add(
+        tiles.reshape(-1, tiles.shape[-1]))
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        y_ref[...] = y_ref[...] + partial
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_tile", "block_nnz",
+                                             "block_k", "slabs_per_block",
+                                             "interpret"))
+def bcsr_spmm(data: jax.Array, block_cols: jax.Array, indptr: jax.Array,
+              x: jax.Array, *, rows_per_tile: int = 32, block_nnz: int = 512,
+              block_k: int = 128, slabs_per_block: int = 0,
+              interpret: bool = True) -> jax.Array:
+    """Y = A @ X, A in BCSR, X ((n_col_blocks * b), k) -> (nbr * b, k) f32.
+
+    Grid = (row_tiles, k_blocks, slabs); slabs innermost (sequential)."""
+    nbr = indptr.shape[0] - 1
+    b = data.shape[1]
+    n_cols_pad, kk = x.shape
+    assert kk % block_k == 0, (kk, block_k)
+    r = -(-nbr // rows_per_tile)
+    total = -(-data.shape[0] // block_nnz)
+    spb, slab_start = _slab_schedule(indptr, r, rows_per_tile, block_nnz,
+                                     total, slabs_per_block)
+    win = _row_windows(indptr, nbr, rows_per_tile)
+    data = _pad_block_slabs(data, total, block_nnz)
+    block_cols = _pad_block_slabs(block_cols, total, block_nnz)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r, kk // block_k, spb),
+        in_specs=[
+            pl.BlockSpec((block_nnz, b, b),
+                         lambda i, c, j, s: (s[i] + j, 0, 0)),
+            pl.BlockSpec((block_nnz,), lambda i, c, j, s: (s[i] + j,)),
+            pl.BlockSpec((1, rows_per_tile + 1), lambda i, c, j, s: (i, 0)),
+            pl.BlockSpec((n_cols_pad, block_k), lambda i, c, j, s: (0, c)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_tile * b, block_k),
+                               lambda i, c, j, s: (i, c)),
+    )
+    y = pl.pallas_call(
+        functools.partial(_bcsr_spmm_kernel, interpret, r > 1),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r * rows_per_tile * b, kk),
+                                       jnp.float32),
+        interpret=interpret,
+    )(slab_start.astype(jnp.int32), data, block_cols, win, x)
+    return y[: nbr * b]

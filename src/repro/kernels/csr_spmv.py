@@ -1,0 +1,247 @@
+"""Native row-segmented CSR SpMV / SpMM Pallas TPU kernels.
+
+Until this module existed the kernel tier served CSR by expanding IRP to
+IROW at call time and running the COO kernel — one sequential grid with the
+whole y vector resident in VMEM.  This kernel keeps CSR native and restores
+row parallelism:
+
+  * the grid is ``(row_blocks, slabs_per_block)`` (SpMM adds a parallel k
+    axis): each row block owns a private ``(block_rows,)`` output tile, so
+    row blocks are *parallel* — there is no whole-matrix y in VMEM and no
+    global sequential walk;
+  * a row block's nonzeros are contiguous in CSR order
+    (``IRP[i*br] : IRP[(i+1)*br]``), so its slabs are located by *scalar
+    prefetch*: ``slab_start[i] = IRP[i*br] // block_nnz`` feeds the
+    BlockSpec index map and the VAL/ICOL slabs stream straight out of the
+    row block's own span — the TPU form of the paper's per-thread
+    contiguous CRS walk (§3.1's outer parallelization);
+  * within a slab, each entry's local row is recovered from the row block's
+    IRP window by a compare-count (a vectorized ``searchsorted``), then a
+    short local scatter-add accumulates into the (VMEM-resident) row tile.
+
+``slabs_per_block`` must statically bound ``ceil(span / block_nnz) + 1``
+over all row blocks.  It is data-dependent, which is exactly why the launch
+geometry auto-tuner (``core/kernel_tune.py``) exists: tuning happens with
+the concrete matrix in hand, and the winning :class:`TileGeometry` carries
+the exact bound into traced hot paths.  Callers without a bound pass
+``slab_starts=None`` and the kernel degrades to a full sequential sweep per
+row block (always correct, never fast) — see ``slabs_needed``.
+
+Padding conventions match the rest of the repo: pad entries are
+(val=0, col=0) and fall outside every row block's IRP window.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def slabs_needed(indptr, block_rows: int, block_nnz: int) -> int:
+    """Exact ``slabs_per_block`` for a concrete IRP: the static per-row-block
+    slab count that guarantees every nonzero is visited.  Slab starts are
+    floor-aligned to ``block_nnz`` boundaries, so a block needs the slabs
+    from ``floor(first / bn)`` through ``floor((last - 1) / bn)``."""
+    ip = np.asarray(indptr)
+    n_rows = ip.shape[0] - 1
+    edges = ip[np.minimum(np.arange(0, n_rows + block_rows, block_rows),
+                          n_rows)]
+    starts, ends = edges[:-1], edges[1:]
+    if starts.size == 0:
+        return 1
+    needed = np.where(ends > starts,
+                      (ends - 1) // block_nnz - starts // block_nnz + 1, 1)
+    return max(int(needed.max()), 1)
+
+
+def _row_windows(indptr: jax.Array, n_rows: int, block_rows: int) -> jax.Array:
+    """(R, block_rows + 1) IRP windows, one per row block; rows past the end
+    get the final pointer (empty rows).  One clipped gather — windows
+    overlap by one entry, so a reshape can't produce them."""
+    r = -(-n_rows // block_rows)
+    ip = jnp.asarray(indptr)
+    if r == 1 and block_rows == n_rows:
+        return ip[None, :]
+    idx = (jnp.arange(r, dtype=jnp.int32)[:, None] * block_rows +
+           jnp.arange(block_rows + 1, dtype=jnp.int32)[None, :])
+    return ip[jnp.minimum(idx, n_rows)]
+
+
+def _pad_slabs(a: jax.Array, n_slabs: int, block_nnz: int) -> jax.Array:
+    target = n_slabs * block_nnz
+    if a.shape[0] < target:
+        a = jnp.pad(a, (0, target - a.shape[0]))
+    return a
+
+
+def _slab_schedule(indptr, r: int, block_rows: int, block_nnz: int,
+                   total: int, slabs_per_block: int):
+    """(spb, slab_start) for the (row_blocks, spb) grid.  Tight slab starts
+    are clamped to ``total - spb`` so the furthest reachable slab is always
+    the last real one — a clamped window still covers its block's span
+    (the span's last slab is < total), and no extra padding slabs exist."""
+    if slabs_per_block:
+        spb = min(slabs_per_block, total)
+        start = jnp.asarray(indptr)[::block_rows][:r] // block_nnz
+        return spb, jnp.minimum(start, total - spb)
+    return total, jnp.zeros((r,), jnp.int32)
+
+
+def _local_rows(ip_window: jax.Array, k0, bn: int, ip_dtype,
+                interpret: bool = True, masked: bool = True):
+    """Local row id of each global nnz index in ``[k0, k0 + bn)`` within
+    one row block's IRP window, plus the in-window validity mask —
+    semantically ``searchsorted(window, k, 'right') - 1``.
+
+    The slab's indices are a *contiguous* range, so the search inverts into
+    an O(br + bn) scatter + prefix sum over the row *boundaries* (each
+    window pointer marks where the local row increments) — strictly less
+    work than any per-entry search, and the concrete edge this kernel holds
+    over the CSR-via-COO detour, whose IROW expansion must binary-search
+    every nonzero on every call.  The compiled path keeps the VPU-lowerable
+    O(bn x br) compare-count form (Mosaic has no 1D scatter).
+
+    ``masked=False`` skips the validity mask (returns ``valid=None``): with
+    a single row block every stored entry belongs to it and the tail pads
+    carry val=0, contributing nothing wherever they scatter."""
+    br = ip_window.shape[0] - 1
+    k0 = jnp.asarray(k0, ip_dtype)
+    if interpret:
+        marks = jnp.zeros((bn + 1,), jnp.int32).at[
+            jnp.clip(ip_window - k0, 0, bn)].add(1)
+        lrow = jnp.cumsum(marks[:bn]) - 1
+    else:
+        k = k0 + jax.lax.broadcasted_iota(ip_dtype, (bn,), 0)
+        lrow = jnp.sum(ip_window[None, :] <= k[:, None], axis=1) - 1
+    valid = None
+    if masked:
+        k = k0 + jax.lax.broadcasted_iota(ip_dtype, (bn,), 0)
+        valid = (k >= ip_window[0]) & (k < ip_window[br])
+    return jnp.clip(lrow, 0, br - 1), valid
+
+
+def _csr_spmv_kernel(interpret, masked, slab_ref, data_ref, cols_ref,
+                     win_ref, x_ref, y_ref):
+    i, j = pl.program_id(0), pl.program_id(1)
+    bn = data_ref.shape[0]
+    lrow, valid = _local_rows(win_ref[0, :], (slab_ref[i] + j) * bn, bn,
+                              jnp.int32, interpret, masked)
+    contrib = (data_ref[...].astype(jnp.float32) *
+               x_ref[...].astype(jnp.float32)[cols_ref[...]])
+    if valid is not None:
+        contrib = jnp.where(valid, contrib, 0.0)
+    partial = jnp.zeros_like(y_ref).at[lrow].add(contrib)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        y_ref[...] = y_ref[...] + partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_nnz",
+                                             "slabs_per_block", "interpret"))
+def csr_spmv(data: jax.Array, cols: jax.Array, indptr: jax.Array,
+             x: jax.Array, *, block_rows: int = 256, block_nnz: int = 2048,
+             slabs_per_block: int = 0, interpret: bool = True) -> jax.Array:
+    """y = A @ x, A in CSR (VAL/ICOL padded with zeros past IRP[-1]).
+
+    ``slabs_per_block``: static bound from :func:`slabs_needed` (scalar-
+    prefetched tight slab starts); 0 selects the always-correct full sweep
+    (every row block scans every slab).  Returns (n_rows,) float32; callers
+    cast (the ops wrapper keeps the repo's f32-accumulate convention)."""
+    n_rows = indptr.shape[0] - 1
+    r = -(-n_rows // block_rows)
+    total = -(-data.shape[0] // block_nnz)
+    spb, slab_start = _slab_schedule(indptr, r, block_rows, block_nnz,
+                                     total, slabs_per_block)
+    win = _row_windows(indptr, n_rows, block_rows)
+    data = _pad_slabs(data, total, block_nnz)
+    cols = _pad_slabs(cols, total, block_nnz)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r, spb),
+        in_specs=[
+            pl.BlockSpec((block_nnz,), lambda i, j, s: (s[i] + j,)),
+            pl.BlockSpec((block_nnz,), lambda i, j, s: (s[i] + j,)),
+            pl.BlockSpec((1, block_rows + 1), lambda i, j, s: (i, 0)),
+            pl.BlockSpec(x.shape, lambda i, j, s: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i, j, s: (i,)),
+    )
+    y = pl.pallas_call(
+        functools.partial(_csr_spmv_kernel, interpret, r > 1),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r * block_rows,), jnp.float32),
+        interpret=interpret,
+    )(slab_start.astype(jnp.int32), data, cols, win, x)
+    return y[:n_rows]
+
+
+def _csr_spmm_kernel(interpret, masked, slab_ref, data_ref, cols_ref,
+                     win_ref, x_ref, y_ref):
+    i, j = pl.program_id(0), pl.program_id(2)
+    bn = data_ref.shape[0]
+    lrow, valid = _local_rows(win_ref[0, :], (slab_ref[i] + j) * bn, bn,
+                              jnp.int32, interpret, masked)
+    gathered = x_ref[...].astype(jnp.float32)[cols_ref[...], :]
+    contrib = data_ref[...].astype(jnp.float32)[:, None] * gathered
+    if valid is not None:
+        contrib = jnp.where(valid[:, None], contrib, 0.0)
+    partial = jnp.zeros_like(y_ref).at[lrow, :].add(contrib)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        y_ref[...] = y_ref[...] + partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_nnz",
+                                             "block_k", "slabs_per_block",
+                                             "interpret"))
+def csr_spmm(data: jax.Array, cols: jax.Array, indptr: jax.Array,
+             x: jax.Array, *, block_rows: int = 256, block_nnz: int = 2048,
+             block_k: int = 128, slabs_per_block: int = 0,
+             interpret: bool = True) -> jax.Array:
+    """Y = A @ X, A in CSR, X (n_cols, k) -> Y (n_rows, k) float32.
+
+    Grid = (row_blocks, k_blocks, slabs); slabs are the innermost
+    (sequential accumulation) axis, rows and k parallel."""
+    n_rows = indptr.shape[0] - 1
+    n_cols, kk = x.shape
+    assert kk % block_k == 0, (kk, block_k)
+    r = -(-n_rows // block_rows)
+    total = -(-data.shape[0] // block_nnz)
+    spb, slab_start = _slab_schedule(indptr, r, block_rows, block_nnz,
+                                     total, slabs_per_block)
+    win = _row_windows(indptr, n_rows, block_rows)
+    data = _pad_slabs(data, total, block_nnz)
+    cols = _pad_slabs(cols, total, block_nnz)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r, kk // block_k, spb),
+        in_specs=[
+            pl.BlockSpec((block_nnz,), lambda i, c, j, s: (s[i] + j,)),
+            pl.BlockSpec((block_nnz,), lambda i, c, j, s: (s[i] + j,)),
+            pl.BlockSpec((1, block_rows + 1), lambda i, c, j, s: (i, 0)),
+            pl.BlockSpec((n_cols, block_k), lambda i, c, j, s: (0, c)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, block_k),
+                               lambda i, c, j, s: (i, c)),
+    )
+    y = pl.pallas_call(
+        functools.partial(_csr_spmm_kernel, interpret, r > 1),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r * block_rows, kk), jnp.float32),
+        interpret=interpret,
+    )(slab_start.astype(jnp.int32), data, cols, win, x)
+    return y[:n_rows]

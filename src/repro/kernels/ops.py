@@ -7,22 +7,34 @@ Responsibilities:
   * provide custom VJPs so the kernels are trainable (y = A@x  =>
     dx = A^T dy via a COO scatter; dA = dy_r * x_c at the stored positions);
   * auto-select interpret mode off-TPU;
+  * accept a per-call launch geometry (``tuning=`` — a
+    ``core.kernel_tune.TileGeometry``); ``None`` fields fall back to the
+    built-in defaults below, so the kernel launch-geometry auto-tuner can
+    override exactly the knobs it searched;
   * register every format-level wrapper in the ``repro.core.dispatch``
     registry under the ``"kernel"`` tier — ``KERNEL_SPMV_IMPLS`` /
     ``KERNEL_SPMM_IMPLS`` below are views of that registry, kept for
     callers that want a plain dict.
+
+CSR is served by the native row-segmented kernel (``kernels/csr_spmv.py``);
+the old CSR-via-COO detour survives only as ``spmv_csr_via_coo`` /
+``spmm_csr_via_coo`` so benchmarks can measure what replacing it bought.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dispatch as _dispatch
-from repro.core.formats import COO, CSR, ELL, BucketedELL
+from repro.core.formats import BCSR, COO, CSR, ELL, BucketedELL
+from repro.core.kernel_tune import TileGeometry
+from . import bcsr_spmv as _bcsr
 from . import coo_spmv as _coo
+from . import csr_spmv as _csr
 from . import ell_spmv as _ell
 
 
@@ -44,25 +56,41 @@ def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
     return jnp.pad(x, pads, constant_values=value)
 
 
+def _align8(n: int) -> int:
+    return max(8, 8 * ((int(n) + 7) // 8))
+
+
 def _block_sizes(n_rows: int, width: int) -> Tuple[int, int]:
-    """Pick aligned block sizes that keep the working set well inside VMEM
-    (default tiles: 256x128 f32 = 128 KiB/operand)."""
-    br = min(256, max(8, 8 * ((n_rows + 7) // 8)))
-    bw = 128 if width > 8 else 8
+    """Default tile shape: rows capped at 256 sublanes; the band tile is the
+    smallest 8-aligned width covering the band, capped at 128 lanes — a
+    40-wide band used to be padded to 128 lanes (up to 16x wasted work per
+    tile), now it gets a 40-lane tile."""
+    br = min(256, _align8(n_rows))
+    bw = min(128, _align8(width))
     return br, bw
 
 
 def _block_k(k: int) -> int:
-    return min(128, max(8, 8 * ((k + 7) // 8)))
+    return min(128, _align8(k))
+
+
+def _geom(tuning: Optional[TileGeometry], name: str, default: int,
+          cap: Optional[int] = None) -> int:
+    v = getattr(tuning, name, None) if tuning is not None else None
+    v = default if v is None else _align8(v)
+    return min(v, cap) if cap is not None else v
 
 
 # ---------------------------------------------------------------------------
 # raw-array entry points (padding + alignment)
 # ---------------------------------------------------------------------------
 def ell_spmv_raw(data: jax.Array, cols: jax.Array, x: jax.Array,
-                 interpret: Optional[bool] = None) -> jax.Array:
+                 interpret: Optional[bool] = None,
+                 tuning: Optional[TileGeometry] = None) -> jax.Array:
     n_rows, width = data.shape
-    br, bw = _block_sizes(n_rows, width)
+    br0, bw0 = _block_sizes(n_rows, width)
+    br = _geom(tuning, "block_rows", br0, cap=_align8(n_rows))
+    bw = _geom(tuning, "block_w", bw0, cap=_align8(width))
     data = _pad_to(_pad_to(data, 0, br), 1, bw)
     cols = _pad_to(_pad_to(cols, 0, br), 1, bw)
     y = _ell.ell_spmv(data, cols, x, block_rows=br, block_w=bw,
@@ -71,12 +99,15 @@ def ell_spmv_raw(data: jax.Array, cols: jax.Array, x: jax.Array,
 
 
 def ell_spmm_raw(data: jax.Array, cols: jax.Array, x: jax.Array,
-                 interpret: Optional[bool] = None) -> jax.Array:
+                 interpret: Optional[bool] = None,
+                 tuning: Optional[TileGeometry] = None) -> jax.Array:
     n_rows, width = data.shape
     k = x.shape[1]
-    br = min(128, max(8, 8 * ((n_rows + 7) // 8)))
-    bw = 128 if width > 8 else 8
-    bk = _block_k(k)
+    _, bw0 = _block_sizes(n_rows, width)
+    br = _geom(tuning, "block_rows", min(128, _align8(n_rows)),
+               cap=_align8(n_rows))
+    bw = _geom(tuning, "block_w", bw0, cap=_align8(width))
+    bk = _geom(tuning, "block_k", _block_k(k), cap=_align8(k))
     data = _pad_to(_pad_to(data, 0, br), 1, bw)
     cols = _pad_to(_pad_to(cols, 0, br), 1, bw)
     xp = _pad_to(x, 1, bk)
@@ -87,8 +118,10 @@ def ell_spmm_raw(data: jax.Array, cols: jax.Array, x: jax.Array,
 
 def coo_spmv_raw(data: jax.Array, rows: jax.Array, cols: jax.Array,
                  x: jax.Array, n_rows: int,
-                 interpret: Optional[bool] = None) -> jax.Array:
-    bn = min(4096, max(8, 8 * ((data.shape[0] + 7) // 8)))
+                 interpret: Optional[bool] = None,
+                 tuning: Optional[TileGeometry] = None) -> jax.Array:
+    bn = _geom(tuning, "block_nnz", min(4096, _align8(data.shape[0])),
+               cap=_align8(data.shape[0]))
     data = _pad_to(data, 0, bn)
     rows = _pad_to(rows, 0, bn)
     cols = _pad_to(cols, 0, bn)
@@ -98,10 +131,12 @@ def coo_spmv_raw(data: jax.Array, rows: jax.Array, cols: jax.Array,
 
 def coo_spmm_raw(data: jax.Array, rows: jax.Array, cols: jax.Array,
                  x: jax.Array, n_rows: int,
-                 interpret: Optional[bool] = None) -> jax.Array:
+                 interpret: Optional[bool] = None,
+                 tuning: Optional[TileGeometry] = None) -> jax.Array:
     k = x.shape[1]
-    bn = min(4096, max(8, 8 * ((data.shape[0] + 7) // 8)))
-    bk = _block_k(k)
+    bn = _geom(tuning, "block_nnz", min(4096, _align8(data.shape[0])),
+               cap=_align8(data.shape[0]))
+    bk = _geom(tuning, "block_k", _block_k(k), cap=_align8(k))
     data = _pad_to(data, 0, bn)
     rows = _pad_to(rows, 0, bn)
     cols = _pad_to(cols, 0, bn)
@@ -146,31 +181,78 @@ def _ell_arrays(m: ELL):
     return data, cols
 
 
-def spmv_ell(m: ELL, x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
+def spmv_ell(m: ELL, x: jax.Array, interpret: Optional[bool] = None,
+             tuning: Optional[TileGeometry] = None) -> jax.Array:
     data, cols = _ell_arrays(m)
-    return ell_spmv_raw(data, cols, x, interpret)
+    return ell_spmv_raw(data, cols, x, interpret, tuning)
 
 
-def spmm_ell(m: ELL, x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
+def spmm_ell(m: ELL, x: jax.Array, interpret: Optional[bool] = None,
+             tuning: Optional[TileGeometry] = None) -> jax.Array:
     data, cols = _ell_arrays(m)
-    return ell_spmm_raw(data, cols, x, interpret)
+    return ell_spmm_raw(data, cols, x, interpret, tuning)
 
 
-def spmv_coo(m: COO, x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
+def spmv_coo(m: COO, x: jax.Array, interpret: Optional[bool] = None,
+             tuning: Optional[TileGeometry] = None) -> jax.Array:
     return coo_spmv_raw(jnp.asarray(m.data), jnp.asarray(m.rows),
-                        jnp.asarray(m.cols), x, m.n_rows, interpret)
+                        jnp.asarray(m.cols), x, m.n_rows, interpret, tuning)
 
 
-def spmm_coo(m: COO, x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
+def spmm_coo(m: COO, x: jax.Array, interpret: Optional[bool] = None,
+             tuning: Optional[TileGeometry] = None) -> jax.Array:
     return coo_spmm_raw(jnp.asarray(m.data), jnp.asarray(m.rows),
-                        jnp.asarray(m.cols), x, m.n_rows, interpret)
+                        jnp.asarray(m.cols), x, m.n_rows, interpret, tuning)
+
+
+# ---------------------------------------------------------------------------
+# CSR — native row-segmented kernel (kernels/csr_spmv.py)
+# ---------------------------------------------------------------------------
+def _csr_slab_bound(m: CSR, br: int, bn: int,
+                    tuning: Optional[TileGeometry]) -> int:
+    """Static slab-coverage bound: exact when the index structure is
+    concrete; from the tuned geometry under trace; 0 (always-correct full
+    sweep) otherwise."""
+    ip = m.indptr
+    if not isinstance(ip, jax.core.Tracer):
+        return _csr.slabs_needed(np.asarray(ip), br, bn)
+    if tuning is not None and tuning.slabs_per_block is not None:
+        return int(tuning.slabs_per_block)
+    return 0
+
+
+def spmv_csr(m: CSR, x: jax.Array, interpret: Optional[bool] = None,
+             tuning: Optional[TileGeometry] = None) -> jax.Array:
+    """CSR through the native row-segmented kernel (no COO detour)."""
+    br = _geom(tuning, "block_rows", min(256, _align8(m.n_rows)),
+               cap=_align8(m.n_rows))
+    bn = _geom(tuning, "block_nnz", min(2048, _align8(m.nnz_pad)))
+    spb = _csr_slab_bound(m, br, bn, tuning)
+    y = _csr.csr_spmv(jnp.asarray(m.data), jnp.asarray(m.cols),
+                      jnp.asarray(m.indptr), x, block_rows=br, block_nnz=bn,
+                      slabs_per_block=spb, interpret=_interpret(interpret))
+    return y.astype(jnp.result_type(m.data.dtype, x.dtype))
+
+
+def spmm_csr(m: CSR, x: jax.Array, interpret: Optional[bool] = None,
+             tuning: Optional[TileGeometry] = None) -> jax.Array:
+    k = x.shape[1]
+    br = _geom(tuning, "block_rows", min(256, _align8(m.n_rows)),
+               cap=_align8(m.n_rows))
+    bn = _geom(tuning, "block_nnz", min(2048, _align8(m.nnz_pad)))
+    bk = _geom(tuning, "block_k", _block_k(k), cap=_align8(k))
+    spb = _csr_slab_bound(m, br, bn, tuning)
+    xp = _pad_to(x, 1, bk)
+    y = _csr.csr_spmm(jnp.asarray(m.data), jnp.asarray(m.cols),
+                      jnp.asarray(m.indptr), xp, block_rows=br, block_nnz=bn,
+                      block_k=bk, slabs_per_block=spb,
+                      interpret=_interpret(interpret))
+    return y[:, :k].astype(jnp.result_type(m.data.dtype, x.dtype))
 
 
 def _csr_as_coo_arrays(m: CSR):
-    """The jit-able IRP->IROW expansion shared by the CSR kernel paths.
-
-    Pure CSR's per-row segmented reduction has no efficient TPU mapping
-    (DESIGN.md §2) — the row expansion is the TPU-idiomatic equivalent."""
+    """The jit-able IRP->IROW expansion — the pre-native CSR kernel path,
+    kept for the tuned-vs-detour benchmark comparison."""
     ip = jnp.asarray(m.indptr)
     k = jnp.arange(m.nnz_pad, dtype=ip.dtype)
     rows = jnp.clip(jnp.searchsorted(ip, k, side="right") - 1, 0, m.n_rows - 1)
@@ -179,61 +261,142 @@ def _csr_as_coo_arrays(m: CSR):
     return data, rows, jnp.asarray(m.cols)
 
 
-def spmv_csr(m: CSR, x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
-    """CSR via the IRP->IROW expansion + the COO kernel."""
+def spmv_csr_via_coo(m: CSR, x: jax.Array,
+                     interpret: Optional[bool] = None,
+                     tuning: Optional[TileGeometry] = None) -> jax.Array:
+    """Legacy CSR path: IRP->IROW expansion + the COO kernel (benchmark
+    baseline only — the registry serves :func:`spmv_csr`)."""
     data, rows, cols = _csr_as_coo_arrays(m)
-    return coo_spmv_raw(data, rows, cols, x, m.n_rows, interpret)
+    return coo_spmv_raw(data, rows, cols, x, m.n_rows, interpret, tuning)
 
 
-def spmm_csr(m: CSR, x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
+def spmm_csr_via_coo(m: CSR, x: jax.Array,
+                     interpret: Optional[bool] = None,
+                     tuning: Optional[TileGeometry] = None) -> jax.Array:
     data, rows, cols = _csr_as_coo_arrays(m)
-    return coo_spmm_raw(data, rows, cols, x, m.n_rows, interpret)
+    return coo_spmm_raw(data, rows, cols, x, m.n_rows, interpret, tuning)
 
 
+# ---------------------------------------------------------------------------
+# BCSR — block-tiled kernel (kernels/bcsr_spmv.py)
+# ---------------------------------------------------------------------------
+def _bcsr_geometry(m: BCSR, tuning: Optional[TileGeometry]):
+    rpt = max(1, min(_geom(tuning, "block_rows", min(32, m.n_block_rows or 1)),
+                     m.n_block_rows or 1))
+    bnb = max(1, min(_geom(tuning, "block_nnz",
+                           min(512, _align8(m.nblocks_pad))),
+                     _align8(m.nblocks_pad)))
+    ip = m.indptr
+    if not isinstance(ip, jax.core.Tracer):
+        spb = _bcsr.slabs_needed(np.asarray(ip), rpt, bnb)
+    elif tuning is not None and tuning.slabs_per_block is not None:
+        spb = int(tuning.slabs_per_block)
+    else:
+        spb = 0
+    return rpt, bnb, spb
+
+
+def exact_slab_bound(m, tuning: Optional[TileGeometry] = None) -> int:
+    """Concrete slab-coverage bound for a CSR/BCSR instance at the
+    wrapper's own *effective* launch geometry (tile knobs get clamped to
+    the instance, so the bound must be derived post-clamp).  For baking
+    one bound into a geometry shared by sibling blocks, take the max over
+    the blocks — a larger bound only adds masked slabs, never drops
+    entries."""
+    t = tuning.without_slab_bound() if tuning is not None else None
+    if isinstance(m, CSR):
+        br = _geom(t, "block_rows", min(256, _align8(m.n_rows)),
+                   cap=_align8(m.n_rows))
+        bn = _geom(t, "block_nnz", min(2048, _align8(m.nnz_pad)))
+        return _csr.slabs_needed(np.asarray(m.indptr), br, bn)
+    if isinstance(m, BCSR):
+        return _bcsr_geometry(m, t)[2]
+    raise TypeError(f"no slab-coverage bound for {type(m)}")
+
+
+def spmv_bcsr(m: BCSR, x: jax.Array, interpret: Optional[bool] = None,
+              tuning: Optional[TileGeometry] = None) -> jax.Array:
+    rpt, bnb, spb = _bcsr_geometry(m, tuning)
+    xp = _pad_to(x, 0, m.block)
+    y = _bcsr.bcsr_spmv(jnp.asarray(m.data), jnp.asarray(m.block_cols),
+                        jnp.asarray(m.indptr), xp, rows_per_tile=rpt,
+                        block_nnz=bnb, slabs_per_block=spb,
+                        interpret=_interpret(interpret))
+    return y[: m.n_rows].astype(jnp.result_type(m.data.dtype, x.dtype))
+
+
+def spmm_bcsr(m: BCSR, x: jax.Array, interpret: Optional[bool] = None,
+              tuning: Optional[TileGeometry] = None) -> jax.Array:
+    k = x.shape[1]
+    rpt, bnb, spb = _bcsr_geometry(m, tuning)
+    bk = _geom(tuning, "block_k", _block_k(k), cap=_align8(k))
+    xp = _pad_to(_pad_to(x, 0, m.block), 1, bk)
+    y = _bcsr.bcsr_spmm(jnp.asarray(m.data), jnp.asarray(m.block_cols),
+                        jnp.asarray(m.indptr), xp, rows_per_tile=rpt,
+                        block_nnz=bnb, block_k=bk, slabs_per_block=spb,
+                        interpret=_interpret(interpret))
+    return y[: m.n_rows, :k].astype(jnp.result_type(m.data.dtype, x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# SELL / hybrid containers
+# ---------------------------------------------------------------------------
 def spmv_sell(m: BucketedELL, x: jax.Array,
-              interpret: Optional[bool] = None) -> jax.Array:
+              interpret: Optional[bool] = None,
+              tuning: Optional[TileGeometry] = None) -> jax.Array:
     # an all-zero matrix may carry an empty bucket list — the product is
     # exactly zeros of (n_rows,) in x's dtype, not None
     perm = jnp.asarray(m.perm)
     y = jnp.zeros((m.n_rows,), x.dtype)
     for off, b in zip(m.row_offsets, m.buckets):
         yb = ell_spmv_raw(jnp.asarray(b.data), jnp.asarray(b.cols), x,
-                          interpret)
+                          interpret, tuning)
         y = y.at[perm[off:off + b.n_rows]].set(yb.astype(y.dtype))
     return y
 
 
 def spmm_sell(m: BucketedELL, x: jax.Array,
-              interpret: Optional[bool] = None) -> jax.Array:
+              interpret: Optional[bool] = None,
+              tuning: Optional[TileGeometry] = None) -> jax.Array:
     perm = jnp.asarray(m.perm)
     y = jnp.zeros((m.n_rows, x.shape[1]), x.dtype)
     for off, b in zip(m.row_offsets, m.buckets):
         yb = ell_spmm_raw(jnp.asarray(b.data), jnp.asarray(b.cols), x,
-                          interpret)
+                          interpret, tuning)
         y = y.at[perm[off:off + b.n_rows]].set(yb.astype(y.dtype))
     return y
 
 
-def _kernel_block_impls(op: str, interpret: Optional[bool]):
+def _kernel_block_impls(op: str, interpret: Optional[bool],
+                        tuning: Optional[Dict[str, TileGeometry]] = None):
     """Per-block overrides for the hybrid container: every kernel-tier impl
-    except hybrid itself, with ``interpret`` bound."""
-    return {f: functools.partial(impl, interpret=interpret)
-            for f, impl in _dispatch.impl_table(op, "kernel",
-                                                exclude=("hybrid",)).items()}
+    except hybrid itself, with ``interpret`` (and any per-format tuned
+    geometry) bound."""
+    out = {}
+    for f, impl in _dispatch.impl_table(op, "kernel",
+                                        exclude=("hybrid",)).items():
+        g = (tuning or {}).get(f)
+        out[f] = functools.partial(impl, interpret=interpret, tuning=g)
+    return out
 
 
 def spmv_hybrid(m, x: jax.Array,
-                interpret: Optional[bool] = None) -> jax.Array:
+                interpret: Optional[bool] = None,
+                tuning: Optional[Dict[str, TileGeometry]] = None
+                ) -> jax.Array:
     """Partitioned hybrid matrix: each row block through its own format's
-    Pallas kernel (reassembly lives in the partition subsystem)."""
+    Pallas kernel (reassembly lives in the partition subsystem).  ``tuning``
+    maps format name -> TileGeometry for the per-block kernels."""
     from repro.partition import spmv_hybrid as _hyb
-    return _hyb(m, x, impls=_kernel_block_impls("spmv", interpret))
+    return _hyb(m, x, impls=_kernel_block_impls("spmv", interpret, tuning))
 
 
 def spmm_hybrid(m, x: jax.Array,
-                interpret: Optional[bool] = None) -> jax.Array:
+                interpret: Optional[bool] = None,
+                tuning: Optional[Dict[str, TileGeometry]] = None
+                ) -> jax.Array:
     from repro.partition import spmm_hybrid as _hyb
-    return _hyb(m, x, impls=_kernel_block_impls("spmm", interpret))
+    return _hyb(m, x, impls=_kernel_block_impls("spmm", interpret, tuning))
 
 
 # ---------------------------------------------------------------------------
@@ -246,15 +409,16 @@ for _fmt, _spmv_fn, _spmm_fn in (
     ("ell_row", spmv_ell, spmm_ell),
     ("ell_col", spmv_ell, spmm_ell),
     ("sell", spmv_sell, spmm_sell),
+    ("bcsr", spmv_bcsr, spmm_bcsr),
     ("hybrid", spmv_hybrid, spmm_hybrid),
 ):
     _dispatch.register_impl(_fmt, "spmv", _spmv_fn, tier="kernel")
     _dispatch.register_impl(_fmt, "spmm", _spmm_fn, tier="kernel")
 
 # read-only dict views of the registry, recomputed on access so later
-# registrations (e.g. a future bcsr Pallas kernel) are never missed — the
-# single source of truth stays in core/dispatch.  Mutating the returned
-# dict has no effect; add or override implementations with
+# registrations are never missed — the single source of truth stays in
+# core/dispatch.  Mutating the returned dict has no effect; add or override
+# implementations with
 # ``repro.core.dispatch.register_impl(fmt, op, fn, tier="kernel")``.
 def __getattr__(name: str):
     if name == "KERNEL_SPMV_IMPLS":
@@ -265,5 +429,8 @@ def __getattr__(name: str):
 
 __all__ = ["ell_spmv_raw", "ell_spmm_raw", "coo_spmv_raw", "coo_spmm_raw",
            "ell_spmv_ad", "spmv_ell", "spmm_ell", "spmv_coo", "spmm_coo",
-           "spmv_csr", "spmm_csr", "spmv_sell", "spmm_sell", "spmv_hybrid",
-           "spmm_hybrid", "KERNEL_SPMV_IMPLS", "KERNEL_SPMM_IMPLS"]
+           "spmv_csr", "spmm_csr", "spmv_csr_via_coo", "spmm_csr_via_coo",
+           "spmv_bcsr", "spmm_bcsr", "exact_slab_bound",
+           "spmv_sell", "spmm_sell",
+           "spmv_hybrid", "spmm_hybrid", "KERNEL_SPMV_IMPLS",
+           "KERNEL_SPMM_IMPLS"]

@@ -19,6 +19,14 @@ Two query paths:
     SpMM call per matrix.  Panels are zero-padded to ``max_batch`` so the
     SpMM dispatcher compiles exactly once per matrix; the ragged last
     micro-batch just carries padding columns that are sliced off.
+    ``deadline_ms`` adds a latency bound: ``submit`` flushes as soon as the
+    oldest pending future has waited past the deadline (and ``poll()`` lets
+    a serving loop sweep overdue queues without new traffic).
+
+With a ``tuner`` (``core.kernel_tune.KernelTuner``), registration also
+runs the kernel launch-geometry search once per block format — the paper's
+register-once/query-many amortization applied one level down, to the tile
+shapes themselves — and every subsequent query reuses the tuned geometry.
 
 The service keeps jit-compiled dispatchers per registered matrix (compiled
 once per block structure), releases them on ``evict``/re-``register`` so
@@ -30,14 +38,16 @@ from __future__ import annotations
 import threading
 import time
 from concurrent.futures import Future
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import dispatch as _dispatch
 from repro.core.autotune import MachineModel, TuningDB, time_fn
 from repro.core.formats import CSR, memory_bytes
+from repro.core.kernel_tune import KernelTuner, TileGeometry
 from repro.core.spmv import spmv as spmv_ref
 from repro.core.policy import MemoryPolicy
 from repro.partition import HybridReport, build_hybrid, spmm_hybrid, spmv_hybrid
@@ -65,7 +75,11 @@ class MatrixEntry:
     n_spmm_calls: int = 0
     n_spmm_cols: int = 0        # total RHS columns served through spmm
     builds: int = 1             # times this key's operator was (re)built
-    pending: List[Tuple[Future, jax.Array]] = field(default_factory=list)
+    tunings: Dict[str, Dict[str, TileGeometry]] = field(default_factory=dict)
+    # pending entries are (future, vector, enqueue time) — the timestamp
+    # drives the deadline flush policy
+    pending: List[Tuple[Future, jax.Array, float]] = field(
+        default_factory=list)
     # guards pending/dead: submit() may race flush()/evict() across threads
     lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
     dead: bool = False          # set by _release; refuses new submits
@@ -93,9 +107,55 @@ class SpMVService:
     strategy: str = "variance"
     impls: Optional[Dict[str, Callable]] = None   # Pallas spmv overrides
     spmm_impls: Optional[Dict[str, Callable]] = None  # Pallas spmm overrides
+    tuner: Optional[KernelTuner] = None  # launch-geometry search at register
     max_batch: int = 32         # micro-batch flush threshold / panel width
     pad_batches: bool = True    # zero-pad panels to max_batch (one compile)
+    deadline_ms: Optional[float] = None  # flush when oldest pending exceeds
     entries: Dict[str, MatrixEntry] = field(default_factory=dict)
+
+    # -- launch-geometry tuning at registration ------------------------------
+    def _tuned_impls(self, hyb) -> Tuple[Optional[Dict], Optional[Dict],
+                                         Dict[str, Dict[str, TileGeometry]]]:
+        """Run the launch-geometry search once per (op, block format) on
+        the biggest block of that format, and bind the winners into the
+        per-block impl dicts.  For CSR/BCSR the slab-coverage bound is
+        re-derived over *all* blocks of that format (a bound learned on one
+        block must cover its siblings, which share the jitted per-format
+        impl)."""
+        if self.tuner is None:
+            return self.impls, self.spmm_impls, {}
+        from repro.kernels.ops import exact_slab_bound
+        bases = {
+            "spmv": dict(self.impls) if self.impls is not None
+            else _dispatch.impl_table("spmv", "kernel", exclude=("hybrid",)),
+            "spmm": dict(self.spmm_impls) if self.spmm_impls is not None
+            else _dispatch.impl_table("spmm", "kernel", exclude=("hybrid",)),
+        }
+        by_fmt: Dict[str, List] = {}
+        for blk, f in zip(hyb.blocks, hyb.formats):
+            by_fmt.setdefault(f, []).append(blk)
+        tunings: Dict[str, Dict[str, TileGeometry]] = {}
+        for op, base in bases.items():
+            batch = 1 if op == "spmv" else self.max_batch
+            per_fmt: Dict[str, TileGeometry] = {}
+            for f, blocks in by_fmt.items():
+                if f not in base:
+                    continue
+                big = max(blocks, key=lambda b: getattr(b, "nnz", 0))
+                try:
+                    rec = self.tuner.tune(big, op=op, batch=batch,
+                                          impl=base[f])
+                except (KeyError, TypeError):
+                    continue
+                g = rec.geometry
+                if f in ("csr", "bcsr"):
+                    spb = max(exact_slab_bound(b, g) for b in blocks)
+                    g = replace(g, slabs_per_block=spb)
+                per_fmt[f] = g
+            tunings[op] = per_fmt
+        bind = self.tuner.bind
+        return (bind(bases["spmv"], tunings["spmv"]),
+                bind(bases["spmm"], tunings["spmm"]), tunings)
 
     def register(self, key: str, csr: CSR, expected_iterations: int = 100,
                  measure_baseline: bool = True, batch: int = 1,
@@ -107,7 +167,10 @@ class SpMVService:
         batch`` products).  ``measure_baseline`` times one whole-matrix CSR
         SpMV and one hybrid SpMV (a few extra calls at registration) so
         ``stats()`` can report true amortization; re-registering a key
-        replaces its operator and releases the stale compiled executables."""
+        replaces its operator and releases the stale compiled executables.
+        With a ``tuner`` set, registration also searches kernel launch
+        geometry per block format and bakes the winners into the jitted
+        dispatchers — queries reuse them for free."""
         # keep the prior operator serving until the replacement is ready —
         # it is popped and released only at the swap below, so concurrent
         # spmv/spmm/submit against this key never see a registration gap
@@ -118,9 +181,10 @@ class SpMVService:
             csr, strategy=self.strategy, db=self.db, model=self.model,
             policy=self.policy, expected_iterations=expected_iterations,
             batch=batch, **build_kw)
-        fn = jax.jit(lambda m, x: spmv_hybrid(m, x, impls=self.impls))
+        impls, spmm_impls, tunings = self._tuned_impls(hyb)
+        fn = jax.jit(lambda m, x: spmv_hybrid(m, x, impls=impls))
         spmm_fn = jax.jit(
-            lambda m, x: spmm_hybrid(m, x, impls=self.spmm_impls))
+            lambda m, x: spmm_hybrid(m, x, impls=spmm_impls))
         t_build = time.perf_counter() - t0
         t_csr = t_hyb = 0.0
         if measure_baseline:
@@ -130,7 +194,7 @@ class SpMVService:
             t_hyb = time_fn(fn, hyb, x0, iters=1, warmup=1)
         entry = MatrixEntry(matrix=hyb, report=report, fn=fn,
                             spmm_fn=spmm_fn, t_build=t_build, t_csr=t_csr,
-                            t_hybrid=t_hyb, builds=builds)
+                            t_hybrid=t_hyb, builds=builds, tunings=tunings)
         self.entries[key] = entry
         if prior is not None:
             # the old operator was valid to the end: serve its queued
@@ -170,7 +234,8 @@ class SpMVService:
 
     # -- micro-batching queue ------------------------------------------------
     def submit(self, key: str, x: jax.Array) -> "Future":
-        """Enqueue one SpMV; resolved by ``flush`` (auto at ``max_batch``)
+        """Enqueue one SpMV; resolved by ``flush`` (auto at ``max_batch``,
+        or as soon as the oldest pending future is past ``deadline_ms``)
         through a single SpMM call per matrix."""
         entry = self.entries[key]
         x = jnp.asarray(x)
@@ -179,16 +244,38 @@ class SpMVService:
             raise ValueError(f"expected x of shape ({entry.matrix.n_cols},); "
                              f"got {x.shape}")
         fut: Future = Future()
+        now = time.perf_counter()
         with entry.lock:
             if entry.dead:
                 # racing evict/re-register: never enqueue onto a released
                 # entry — nothing would ever flush it
                 raise KeyError(f"matrix {key!r} was evicted")
-            entry.pending.append((fut, x))
+            entry.pending.append((fut, x, now))
             full = len(entry.pending) >= self.max_batch
-        if full:
+            overdue = (self.deadline_ms is not None and
+                       (now - entry.pending[0][2]) * 1e3 >= self.deadline_ms)
+        if full or overdue:
             self._flush_entry(entry)
         return fut
+
+    def poll(self) -> int:
+        """Deadline sweep for serving loops: flush every matrix whose
+        oldest pending future has waited past ``deadline_ms``.  Returns the
+        number of vectors served (0 when no deadline is configured)."""
+        if self.deadline_ms is None:
+            return 0
+        now = time.perf_counter()
+        served = 0
+        for k in list(self.entries):
+            e = self.entries.get(k)
+            if e is None:
+                continue
+            with e.lock:
+                due = bool(e.pending) and \
+                    (now - e.pending[0][2]) * 1e3 >= self.deadline_ms
+            if due:
+                served += self._flush_entry(e)
+        return served
 
     def flush(self, key: Optional[str] = None) -> int:
         """Serve all pending vectors (of ``key``, or every matrix) in one
@@ -222,14 +309,14 @@ class SpMVService:
             return 0
         b = len(batch)
         try:
-            X = jnp.stack([x for _, x in batch], axis=1)   # (n_cols, b)
+            X = jnp.stack([x for _, x, _ in batch], axis=1)   # (n_cols, b)
             if self.pad_batches and b < self.max_batch:
                 X = jnp.pad(X, ((0, 0), (0, self.max_batch - b)))
             t0 = time.perf_counter()
             Y = jax.block_until_ready(entry.spmm_fn(entry.matrix, X))
         except Exception as e:
             # never strand a future: the whole panel fails together
-            for fut, _ in batch:
+            for fut, _, _ in batch:
                 fut.set_exception(e)
             raise
         dt = time.perf_counter() - t0
@@ -237,7 +324,7 @@ class SpMVService:
             entry.n_spmm_calls += 1
             entry.n_spmm_cols += b
             entry.t_serve += dt
-        for i, (fut, _) in enumerate(batch):
+        for i, (fut, _, _) in enumerate(batch):
             fut.set_result(Y[:, i])
         return b
 
@@ -252,7 +339,7 @@ class SpMVService:
         with entry.lock:
             entry.dead = True
             stranded, entry.pending = entry.pending, []
-        for fut, _ in stranded:
+        for fut, _, _ in stranded:
             fut.set_exception(KeyError(f"matrix {key!r} evicted with "
                                        "requests pending"))
         for fn in (entry.fn, entry.spmm_fn):
@@ -284,6 +371,8 @@ class SpMVService:
                 "pending": len(e.pending),
                 "builds": e.builds,
                 "compiled": e.compile_count(),
+                "tuned": {op: {f: g.to_dict() for f, g in per.items()}
+                          for op, per in e.tunings.items() if per},
                 "t_serve_s": e.t_serve,
                 "amortized": (None if saved is None
                               else saved >= e.t_build),

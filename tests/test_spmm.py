@@ -2,6 +2,8 @@
 registry, per-format SpMM parity against the dense oracle, the SELL
 empty-bucket regression, the batch-aware auto-tuner, and the micro-batched
 serving queue."""
+import time
+
 import numpy as np
 import pytest
 import jax.numpy as jnp
@@ -53,12 +55,19 @@ def test_format_of_roundtrip(problem):
 
 
 def test_kernel_tables_are_registry_views():
+    from repro.kernels import ops
     from repro.kernels.ops import KERNEL_SPMM_IMPLS, KERNEL_SPMV_IMPLS
     assert KERNEL_SPMV_IMPLS == dispatch.impl_table("spmv", "kernel")
     assert KERNEL_SPMM_IMPLS == dispatch.impl_table("spmm", "kernel")
     # formats without a Pallas kernel fall back to the reference tier
+    assert dispatch.get_impl("ccs", "spmm", tier="kernel") \
+        is dispatch.get_impl("ccs", "spmm", tier="reference")
+    # bcsr and csr are served by native kernels, not fallbacks or detours
     assert dispatch.get_impl("bcsr", "spmm", tier="kernel") \
-        is dispatch.get_impl("bcsr", "spmm", tier="reference")
+        is not dispatch.get_impl("bcsr", "spmm", tier="reference")
+    assert dispatch.get_impl("csr", "spmv", tier="kernel") is ops.spmv_csr
+    assert dispatch.get_impl("csr", "spmv", tier="kernel") \
+        is not ops.spmv_csr_via_coo
 
 
 def test_unknown_format_and_op_raise(problem):
@@ -300,3 +309,56 @@ def test_service_evict_releases_and_reregister_counts(rng):
     assert "m" not in svc.entries
     with pytest.raises(KeyError):
         fut.result(timeout=0)
+
+
+def test_service_deadline_flush_and_poll(rng):
+    dense = random_dense(rng, 40, 30, 0.2)
+    m = csr_from_dense(dense, pad=8)
+    svc = SpMVService(max_batch=64, deadline_ms=1.0)
+    svc.register("m", m, measure_baseline=False)
+    x = np.arange(30, dtype=np.float32)
+    f1 = svc.submit("m", jnp.asarray(x))
+    assert not f1.done()                      # queue far below max_batch
+    time.sleep(0.005)
+    # the next submit sees the oldest future past its deadline and flushes
+    f2 = svc.submit("m", jnp.asarray(x))
+    assert f1.done() and f2.done()
+    np.testing.assert_allclose(np.asarray(f1.result(timeout=0)), dense @ x,
+                               rtol=1e-4, atol=1e-4)
+    # poll() sweeps overdue queues without new traffic; use a deadline far
+    # above scheduler jitter for the not-yet-overdue direction
+    svc.deadline_ms = 60_000.0
+    f3 = svc.submit("m", jnp.asarray(x))
+    assert svc.poll() == 0                    # not yet overdue
+    svc.deadline_ms = 0.0                     # everything pending is overdue
+    assert svc.poll() == 1 and f3.done()
+    # no deadline configured -> poll is a no-op and nothing auto-flushes
+    svc2 = SpMVService(max_batch=64)
+    svc2.register("m", m, measure_baseline=False)
+    f4 = svc2.submit("m", jnp.asarray(x))
+    time.sleep(0.005)
+    svc2.submit("m", jnp.asarray(x))
+    assert svc2.poll() == 0 and not f4.done()
+    assert svc2.flush("m") == 2
+
+
+def test_service_register_with_tuner_serves_tuned_kernels(rng):
+    from repro.core.kernel_tune import KernelTuner
+
+    def fake_timer(thunk, g):
+        thunk()
+        return 1.0 if g is None else 0.5
+
+    dense = random_dense(rng, 96, 64, 0.15)
+    m = csr_from_dense(dense, pad=8)
+    svc = SpMVService(tuner=KernelTuner(timer=fake_timer, interpret=True),
+                      max_batch=4)
+    svc.register("m", m, measure_baseline=False)
+    st = svc.stats()["m"]
+    assert st["tuned"].get("spmv"), st  # a geometry won per block format
+    x = rng.normal(size=64).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(svc.spmv("m", jnp.asarray(x))),
+                               dense @ x, rtol=1e-4, atol=1e-4)
+    X = rng.normal(size=(64, 4)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(svc.spmm("m", jnp.asarray(X))),
+                               dense @ X, rtol=1e-4, atol=1e-4)

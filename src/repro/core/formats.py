@@ -260,8 +260,15 @@ def memory_bytes(fmt) -> int:
     return total
 
 
-FORMAT_NAMES = ("csr", "coo_row", "coo_col", "ell_row", "ell_col", "sell",
-                "hybrid")
+# FORMAT_NAMES is derived from the dispatch registry (module __getattr__
+# below) so it can never again go stale against the registered formats —
+# it used to be a hand-maintained literal that silently omitted bcsr/ccs.
+def __getattr__(name: str):
+    if name == "FORMAT_NAMES":
+        from . import dispatch
+        return tuple(dispatch.registered_formats("spmv"))
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 __all__ = [
     "CSR", "CCS", "COO", "ELL", "BucketedELL", "MatrixStats",

@@ -36,7 +36,7 @@ import jax
 import numpy as np
 
 from . import dispatch as _dispatch
-from .formats import CSR, MatrixStats
+from .formats import CCS, CSR, MatrixStats
 
 __all__ = [
     "TileGeometry", "GeometryRecord", "candidate_geometries",
@@ -50,27 +50,60 @@ __all__ = [
 @dataclass(frozen=True)
 class TileGeometry:
     """Per-call launch geometry; ``None`` fields fall back to the wrapper's
-    built-in default.  Hashable so it can ride through static closures."""
-    block_rows: Optional[int] = None   # ELL/CSR row tile; BCSR block-row tile
+    built-in default.  Hashable so it can ride through static closures.
+
+    ``block_rows`` is the *segmented-axis* tile: rows for ELL/CSR (and
+    block rows for BCSR), columns for CCS — one knob, because no kernel
+    tiles both axes independently.
+
+    ``buckets`` is the SELL per-bucket table: ``((width, TileGeometry),
+    ...)`` pairs keyed by bucket *width*, so one persisted geometry carries
+    a different tile shape for every bucket of the container (SELL-C-σ's
+    point: chunk geometry is per-chunk).  Bucket widths absent from the
+    table fall back to the top-level knobs."""
+    block_rows: Optional[int] = None   # ELL/CSR row tile; CCS col tile; BCSR block-row tile
     block_w: Optional[int] = None      # ELL band (lane) tile
     block_k: Optional[int] = None      # SpMM right-hand-side tile
-    block_nnz: Optional[int] = None    # COO/CSR nnz slab; BCSR blocks/slab
-    slabs_per_block: Optional[int] = None  # CSR/BCSR static coverage bound
+    block_nnz: Optional[int] = None    # COO/CSR/CCS nnz slab; BCSR blocks/slab
+    slabs_per_block: Optional[int] = None  # CSR/CCS/BCSR static coverage bound
+    buckets: Optional[Tuple[Tuple[int, "TileGeometry"], ...]] = None  # SELL
+
+    _KNOBS = ("block_rows", "block_w", "block_k", "block_nnz",
+              "slabs_per_block")
 
     def to_dict(self) -> Dict[str, Any]:
-        return {k: v for k, v in asdict(self).items() if v is not None}
+        d = {k: getattr(self, k) for k in self._KNOBS
+             if getattr(self, k) is not None}
+        if self.buckets is not None:
+            d["buckets"] = [[w, g.to_dict()] for w, g in self.buckets]
+        return d
 
     @staticmethod
     def from_dict(d: Dict[str, Any]) -> "TileGeometry":
-        return TileGeometry(**d)
+        d = dict(d)
+        buckets = d.pop("buckets", None)
+        g = TileGeometry(**d)
+        if buckets is not None:
+            g = replace(g, buckets=tuple(
+                (int(w), TileGeometry.from_dict(gd)) for w, gd in buckets))
+        return g
+
+    def broadcast(self) -> "TileGeometry":
+        """The top-level knobs alone (per-bucket table stripped) — what a
+        bucket whose width is missing from the table launches with."""
+        return replace(self, buckets=None)
 
     def without_slab_bound(self) -> "TileGeometry":
         """Strip the data-dependent coverage bound — required when a
         geometry learned on one matrix is applied to another under trace
-        (the bound would silently drop entries; without it the CSR/BCSR
+        (the bound would silently drop entries; without it the CSR/CCS/BCSR
         kernels fall back to the always-correct full sweep, and concrete
-        callers recompute the exact bound anyway)."""
-        return replace(self, slabs_per_block=None)
+        callers recompute the exact bound anyway).  Applies through the
+        per-bucket table too."""
+        buckets = self.buckets
+        if buckets is not None:
+            buckets = tuple((w, g.without_slab_bound()) for w, g in buckets)
+        return replace(self, slabs_per_block=None, buckets=buckets)
 
 
 @dataclass
@@ -81,7 +114,12 @@ class GeometryRecord:
     ``sig`` fingerprints the index structure (CRC of the pointer array)
     when it was concrete at tune time: two same-sized matrices must not
     share a memoized record, because the winning geometry can carry a
-    matrix-specific slab-coverage bound."""
+    matrix-specific slab-coverage bound.
+
+    ``bucket_w`` marks a SELL per-bucket component record (the winner for
+    the bucket of that width); ``None`` is a whole-matrix record — for
+    SELL that aggregate's geometry carries the composed per-bucket table,
+    and only aggregates feed the nearest-neighbour fallback."""
     fmt: str
     op: str
     batch: int
@@ -92,6 +130,7 @@ class GeometryRecord:
     t_best: float
     t_default: float
     sig: int = 0
+    bucket_w: Optional[int] = None
 
     @property
     def speedup(self) -> float:
@@ -100,6 +139,8 @@ class GeometryRecord:
     def to_dict(self) -> Dict[str, Any]:
         d = asdict(self)
         d["geometry"] = self.geometry.to_dict()
+        if self.bucket_w is None:
+            d.pop("bucket_w")
         return d
 
     @staticmethod
@@ -164,11 +205,13 @@ def candidate_geometries(fmt: str, op: str = "spmv", *, n_rows: int = 0,
         for bn in _nnz_tiles(NNZ_TILES, nnz_pad, MAX_SLAB):
             for k in ks:
                 geoms.append(TileGeometry(block_nnz=bn, block_k=k))
-    elif fmt == "csr":
+    elif fmt in ("csr", "ccs"):
+        # same segmented-slab grid for both; ``n_rows`` is the segmented
+        # axis length, so CCS callers pass the *column* count
         rows = {min(r, _align8(n_rows)) for r in CSR_ROW_TILES} if n_rows \
             else set(CSR_ROW_TILES)
         if n_rows:
-            # the single-row-block boundary (output tile capped for VMEM)
+            # the single-segment-block boundary (tile capped for VMEM)
             rows.add(min(_align8(n_rows), MAX_SLAB))
         for r in sorted(rows):
             for bn in _nnz_tiles(CSR_NNZ_TILES, nnz_pad, MAX_SLAB):
@@ -204,8 +247,11 @@ def nearest_geometry(records: Sequence[GeometryRecord], fmt: str,
     """D_mat-keyed (log-space) nearest neighbour among recorded winners.
 
     The returned geometry is stripped of its slab-coverage bound — that
-    bound is only valid for the matrix it was measured on."""
-    recs = [r for r in records if r.fmt == fmt and r.op == op]
+    bound is only valid for the matrix it was measured on.  SELL
+    per-bucket component records (``bucket_w`` set) are skipped: the
+    whole-matrix aggregate already carries the composed bucket table."""
+    recs = [r for r in records if r.fmt == fmt and r.op == op
+            and getattr(r, "bucket_w", None) is None]
     if batch is not None:
         exact = [r for r in recs if r.batch == batch]
         recs = exact or recs
@@ -239,10 +285,16 @@ def _profile_of(obj: Any, stats: Optional[MatrixStats] = None
     n = int(getattr(obj, "n_rows", 0))
     nnz = int(getattr(obj, "nnz", 0))
     d_mat = 0.0
-    if isinstance(obj, CSR):
-        ip = getattr(obj, "indptr", None)
-        if ip is not None and not isinstance(ip, jax.core.Tracer):
+    ip = getattr(obj, "indptr", None)
+    if ip is not None and not isinstance(ip, jax.core.Tracer):
+        if isinstance(obj, CSR):
             d_mat = float(MatrixStats.of(obj).d_mat)
+        elif isinstance(obj, CCS):
+            # the column-space analogue: nnz-per-column variation is what
+            # shapes the column-segmented launch
+            lens = np.diff(np.asarray(ip)).astype(np.float64)
+            mu = float(lens.mean()) if lens.size else 0.0
+            d_mat = float(lens.std() / mu) if mu > 0 else 0.0
     return n, nnz, d_mat, sig
 
 
@@ -257,14 +309,16 @@ def _width_of(obj: Any) -> int:
 
 
 def _slab_bound_for(obj: Any, g: TileGeometry) -> Optional[int]:
-    """Exact slab coverage bound for a CSR/BCSR candidate, computable only
-    with the concrete index structure in hand."""
+    """Exact slab coverage bound for a CSR/CCS/BCSR candidate, computable
+    only with the concrete index structure in hand (for CCS the pointer is
+    the column pointer — same arithmetic)."""
     ip = getattr(obj, "indptr", None)
     if ip is None or isinstance(ip, jax.core.Tracer):
         return None
     from repro.kernels.csr_spmv import slabs_needed
-    br = g.block_rows or (256 if isinstance(obj, CSR) else 32)
-    bn = g.block_nnz or (2048 if isinstance(obj, CSR) else 512)
+    segmented = isinstance(obj, (CSR, CCS))
+    br = g.block_rows or (256 if segmented else 32)
+    bn = g.block_nnz or (2048 if segmented else 512)
     return slabs_needed(np.asarray(ip), br, bn)
 
 
@@ -308,15 +362,43 @@ class KernelTuner:
             db.geometries = self.records
         self._timer = timer or _real_timer(iters, warmup)
         self.max_candidates = max_candidates
-        self._memo: Dict[Tuple, GeometryRecord] = {
-            self._key(r.fmt, r.op, r.batch, (r.n, r.nnz, r.d_mat, r.sig)): r
-            for r in self.records}
+        # memo maps key -> *index* into self.records, so a forced re-tune
+        # replaces the superseded record in place instead of accumulating
+        # duplicates in the shared (persisted) list
+        self._memo: Dict[Tuple, int] = self._build_memo()
+
+    def _build_memo(self) -> Dict[Tuple, int]:
+        memo = {
+            self._key(r.fmt, r.op, r.batch, (r.n, r.nnz, r.d_mat, r.sig),
+                      getattr(r, "bucket_w", None)): i
+            for i, r in enumerate(self.records)}
+        if len(memo) != len(self.records):
+            # a db persisted before re-tunes replaced in place can carry
+            # stale duplicates; keep the last record per key (the freshest
+            # winner) so nearest_geometry can't resurrect a superseded one
+            # — compact through the slice so the db's list alias heals too
+            self.records[:] = [self.records[i] for i in sorted(memo.values())]
+            return self._build_memo()
+        return memo
 
     @staticmethod
     def _key(fmt: str, op: str, batch: int,
-             profile: Tuple[int, int, float, int]):
+             profile: Tuple[int, int, float, int],
+             bucket_w: Optional[int] = None):
         return (fmt, op, batch, profile[0], profile[1],
-                round(profile[2], 6), profile[3])
+                round(profile[2], 6), profile[3], bucket_w)
+
+    def _record(self, key: Tuple, rec: GeometryRecord) -> GeometryRecord:
+        """Memoize ``rec`` under ``key``, replacing any superseded record
+        in place (keeps one record per key across forced re-tunes, and
+        keeps ``self.records`` aliased with the db's list)."""
+        idx = self._memo.get(key)
+        if idx is None:
+            self._memo[key] = len(self.records)
+            self.records.append(rec)
+        else:
+            self.records[idx] = rec
+        return rec
 
     # -- search --------------------------------------------------------------
     def tune(self, obj: Any, op: str = "spmv", batch: int = 1,
@@ -325,25 +407,40 @@ class KernelTuner:
              force: bool = False) -> GeometryRecord:
         """Time every candidate launch of ``obj``'s kernel and return (and
         memoize) the winner.  The default launch is always a candidate, so
-        ``t_best <= t_default`` by construction."""
+        ``t_best <= t_default`` by construction.
+
+        SELL containers are tuned *per bucket*: each bucket width gets its
+        own candidate sweep (timed on that bucket's ELL launch alone), the
+        per-width winners are memoized as component records, and the
+        returned aggregate's geometry composes them into a
+        ``TileGeometry.buckets`` table."""
         import jax.numpy as jnp
 
         fmt = _dispatch.format_of(obj)
         profile = _profile_of(obj, stats)
+        batch = max(batch, 1)
         key = self._key(fmt, op, batch, profile)
-        if not force and key in self._memo:
-            return self._memo[key]
+        idx = self._memo.get(key)
+        if not force and idx is not None:
+            return self.records[idx]
 
         if impl is None:
             impl = _dispatch.get_impl(fmt, op, tier="kernel", fallback=False)
         if x is None:
-            shape = (obj.n_cols,) if op == "spmv" else (obj.n_cols,
-                                                        max(batch, 1))
+            shape = (obj.n_cols,) if op == "spmv" else (obj.n_cols, batch)
             x = jnp.ones(shape, jnp.float32)
 
+        if fmt == "sell":
+            return self._tune_sell(obj, op, batch, impl, x, profile, key,
+                                   force)
+
         cands: List[Optional[TileGeometry]] = [None]
-        # BCSR row tiles count *block* rows; everything else scalar rows
-        grid_rows = int(getattr(obj, "n_block_rows", profile[0]) or 0)
+        if fmt == "ccs":
+            # the segmented axis is the *column* axis
+            grid_rows = int(getattr(obj, "n_cols", 0) or 0)
+        else:
+            # BCSR row tiles count *block* rows; everything else scalar rows
+            grid_rows = int(getattr(obj, "n_block_rows", profile[0]) or 0)
         grid = candidate_geometries(
             fmt, op, n_rows=grid_rows, width=_width_of(obj),
             nnz_pad=int(getattr(obj, "nnz_pad",
@@ -356,25 +453,78 @@ class KernelTuner:
         times: List[Tuple[float, Optional[TileGeometry]]] = []
         for g in cands:
             gg = g
-            if g is not None and fmt in ("csr", "bcsr"):
+            if g is not None and fmt in ("csr", "ccs", "bcsr"):
                 spb = _slab_bound_for(obj, g)
                 if spb is not None:
                     gg = replace(g, slabs_per_block=spb)
-            fn = jax.jit(lambda m, v, _f=impl, _g=gg:
-                         _f(m, v, interpret=self.interpret, tuning=_g))
-            thunk = lambda _fn=fn: jax.block_until_ready(_fn(obj, x))
-            times.append((float(self._timer(thunk, gg)), gg))
+            times.append((self._time_launch(impl, obj, x, gg), gg))
 
         t_default = times[0][0]
         t_best, best_g = min(times, key=lambda tg: tg[0])
         rec = GeometryRecord(
-            fmt=fmt, op=op, batch=max(batch, 1), n=profile[0],
+            fmt=fmt, op=op, batch=batch, n=profile[0],
             nnz=profile[1], d_mat=profile[2], sig=profile[3],
             geometry=best_g if best_g is not None else TileGeometry(),
             t_best=t_best, t_default=t_default)
-        self._memo[key] = rec
-        self.records.append(rec)
-        return rec
+        return self._record(key, rec)
+
+    def _time_launch(self, impl: Callable, obj: Any, x: jax.Array,
+                     g: Optional[TileGeometry]) -> float:
+        fn = jax.jit(lambda m, v, _f=impl, _g=g:
+                     _f(m, v, interpret=self.interpret, tuning=_g))
+        thunk = lambda _fn=fn: jax.block_until_ready(_fn(obj, x))
+        return float(self._timer(thunk, g))
+
+    def _tune_sell(self, obj: Any, op: str, batch: int, impl: Callable,
+                   x: jax.Array, profile: Tuple[int, int, float, int],
+                   key: Tuple, force: bool) -> GeometryRecord:
+        """Per-bucket SELL search (SELL-C-sigma's per-chunk geometry).
+
+        Bucket widths are distinct by construction (equal-width neighbours
+        merge at transform time), so each width is searched once on its own
+        bucket — an ELL launch over (bucket_rows, width) — and memoized as
+        a component record keyed by ``bucket_w``.  The aggregate then times
+        the composed per-bucket table against the all-defaults launch, so
+        its ``t_best <= t_default`` stays true by construction."""
+        ell_impl = _dispatch.get_impl("ell_row", op, tier="kernel",
+                                      fallback=False)
+        table: List[Tuple[int, TileGeometry]] = []
+        for b in obj.buckets:
+            bkey = self._key("sell", op, batch, profile,
+                             bucket_w=int(b.width))
+            bidx = self._memo.get(bkey)
+            if not force and bidx is not None:
+                table.append((int(b.width), self.records[bidx].geometry))
+                continue
+            grid = candidate_geometries("sell", op, n_rows=b.n_rows,
+                                        width=b.width, batch=batch)
+            if self.max_candidates is not None:
+                grid = grid[: self.max_candidates]
+            times = [(self._time_launch(ell_impl, b, x, g), g)
+                     for g in [None] + grid]
+            t_default = times[0][0]
+            t_best, best_g = min(times, key=lambda tg: tg[0])
+            brec = GeometryRecord(
+                fmt="sell", op=op, batch=batch, n=profile[0],
+                nnz=profile[1], d_mat=profile[2], sig=profile[3],
+                bucket_w=int(b.width),
+                geometry=best_g if best_g is not None else TileGeometry(),
+                t_best=t_best, t_default=t_default)
+            self._record(bkey, brec)
+            table.append((int(b.width), brec.geometry))
+
+        cands: List[Optional[TileGeometry]] = [None]
+        if table:
+            cands.append(TileGeometry(buckets=tuple(table)))
+        times = [(self._time_launch(impl, obj, x, g), g) for g in cands]
+        t_default = times[0][0]
+        t_best, best_g = min(times, key=lambda tg: tg[0])
+        rec = GeometryRecord(
+            fmt="sell", op=op, batch=batch, n=profile[0], nnz=profile[1],
+            d_mat=profile[2], sig=profile[3],
+            geometry=best_g if best_g is not None else TileGeometry(),
+            t_best=t_best, t_default=t_default)
+        return self._record(key, rec)
 
     # -- lookup --------------------------------------------------------------
     def best(self, obj: Any = None, op: str = "spmv", batch: int = 1,
@@ -387,9 +537,9 @@ class KernelTuner:
         if obj is not None:
             fmt = fmt or _dispatch.format_of(obj)
             profile = _profile_of(obj, stats)
-            rec = self._memo.get(self._key(fmt, op, max(batch, 1), profile))
-            if rec is not None:
-                return rec.geometry
+            idx = self._memo.get(self._key(fmt, op, max(batch, 1), profile))
+            if idx is not None:
+                return self.records[idx].geometry
             if d_mat is None:
                 d_mat = profile[2]
         if fmt is None:

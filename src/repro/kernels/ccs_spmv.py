@@ -1,0 +1,181 @@
+"""Native column-segmented CCS SpMV / SpMM Pallas TPU kernels.
+
+CCS is the paper's Phase-I target (CRS -> CCS is the transformation the
+whole auto-tuning method is built to amortize), yet until this module it
+was the last registered format served only by the pure-jnp reference.
+This kernel is the column-space mirror of the row-segmented CSR design in
+``csr_spmv.py``:
+
+  * the grid is ``(col_blocks, slabs_per_block)`` (SpMM adds a parallel k
+    axis): each column block owns a private ``(block_cols,)`` *input* tile
+    of x — the exact dual of CSR, where each row block owns a private
+    output tile;
+  * a column block's nonzeros are contiguous in CCS order
+    (``IRP_T[j*bc] : IRP_T[(j+1)*bc]``), so its slabs are located by
+    *scalar prefetch*: ``slab_start[j] = IRP_T[j*bc] // block_nnz`` feeds
+    the BlockSpec index map and the VAL/IROW slabs stream straight out of
+    the column block's own span;
+  * within a slab, each entry's local column is recovered from the column
+    block's IRP_T window by the same O(bc + bn) scatter + prefix sum
+    (interpret) / compare-count (compiled) split as CSR's row recovery;
+    the entry's contribution ``val * x_tile[lcol]`` is then
+    scatter-accumulated by its stored global row index into the output.
+
+The output is the whole ``(n_rows,)`` y resident in VMEM (as in the COO
+kernel): CCS scatters to arbitrary rows, so there is no private output
+tile — the parallelism this kernel buys is on the *x side* (each column
+block streams only its own VAL/IROW slabs plus a ``(block_cols,)`` x
+tile), and the column-window recovery replaces the per-entry column array
+a COO detour would have to materialize and re-search on every call.
+
+``slabs_per_block`` is data-dependent exactly as in CSR — see
+``csr_spmv.slabs_needed`` (shared here, applied to the column pointer).
+Callers without a bound pass 0 and the kernel degrades to the
+always-correct full sequential sweep per column block.
+
+Padding conventions: pad entries are (val=0, row=0) and fall outside every
+column block's IRP_T window.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .csr_spmv import (_local_rows, _pad_slabs, _row_windows, _slab_schedule,
+                       slabs_needed)
+
+__all__ = ["ccs_spmv", "ccs_spmm", "slabs_needed"]
+
+
+def _pad_cols(x: jax.Array, block_cols: int) -> jax.Array:
+    """Pad x's column axis (axis 0) so it splits into whole column tiles."""
+    n_cols = x.shape[0]
+    target = -(-n_cols // block_cols) * block_cols
+    if target == n_cols:
+        return x
+    return jnp.pad(x, ((0, target - n_cols),) + ((0, 0),) * (x.ndim - 1))
+
+
+def _ccs_spmv_kernel(interpret, masked, slab_ref, data_ref, rows_ref,
+                     win_ref, x_ref, y_ref):
+    i, j = pl.program_id(0), pl.program_id(1)
+    bn = data_ref.shape[0]
+    lcol, valid = _local_rows(win_ref[0, :], (slab_ref[i] + j) * bn, bn,
+                              jnp.int32, interpret, masked)
+    contrib = (data_ref[...].astype(jnp.float32) *
+               x_ref[...].astype(jnp.float32)[lcol])
+    if valid is not None:
+        contrib = jnp.where(valid, contrib, 0.0)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    y_ref[...] = y_ref[...].at[rows_ref[...]].add(contrib)
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "block_cols",
+                                             "block_nnz", "slabs_per_block",
+                                             "interpret"))
+def ccs_spmv(data: jax.Array, rows: jax.Array, indptr: jax.Array,
+             x: jax.Array, *, n_rows: int, block_cols: int = 256,
+             block_nnz: int = 2048, slabs_per_block: int = 0,
+             interpret: bool = True) -> jax.Array:
+    """y = A @ x, A in CCS (VAL/IROW padded with zeros past IRP_T[-1]).
+
+    ``slabs_per_block``: static bound from :func:`slabs_needed` over the
+    column pointer (scalar-prefetched tight slab starts); 0 selects the
+    always-correct full sweep (every column block scans every slab).
+    Returns (n_rows,) float32; callers cast (the ops wrapper keeps the
+    repo's f32-accumulate convention)."""
+    n_cols = indptr.shape[0] - 1
+    c = -(-n_cols // block_cols)
+    total = -(-data.shape[0] // block_nnz)
+    spb, slab_start = _slab_schedule(indptr, c, block_cols, block_nnz,
+                                     total, slabs_per_block)
+    win = _row_windows(indptr, n_cols, block_cols)
+    data = _pad_slabs(data, total, block_nnz)
+    rows = _pad_slabs(rows, total, block_nnz)
+    xp = _pad_cols(x, block_cols)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(c, spb),
+        in_specs=[
+            pl.BlockSpec((block_nnz,), lambda i, j, s: (s[i] + j,)),
+            pl.BlockSpec((block_nnz,), lambda i, j, s: (s[i] + j,)),
+            pl.BlockSpec((1, block_cols + 1), lambda i, j, s: (i, 0)),
+            pl.BlockSpec((block_cols,), lambda i, j, s: (i,)),
+        ],
+        out_specs=pl.BlockSpec((n_rows,), lambda i, j, s: (0,)),
+    )
+    return pl.pallas_call(
+        functools.partial(_ccs_spmv_kernel, interpret, c > 1),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rows,), jnp.float32),
+        interpret=interpret,
+    )(slab_start.astype(jnp.int32), data, rows, win, xp)
+
+
+def _ccs_spmm_kernel(interpret, masked, slab_ref, data_ref, rows_ref,
+                     win_ref, x_ref, y_ref):
+    i, j = pl.program_id(1), pl.program_id(2)
+    bn = data_ref.shape[0]
+    lcol, valid = _local_rows(win_ref[0, :], (slab_ref[i] + j) * bn, bn,
+                              jnp.int32, interpret, masked)
+    contrib = (data_ref[...].astype(jnp.float32)[:, None] *
+               x_ref[...].astype(jnp.float32)[lcol, :])
+    if valid is not None:
+        contrib = jnp.where(valid[:, None], contrib, 0.0)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    y_ref[...] = y_ref[...].at[rows_ref[...], :].add(contrib)
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "block_cols",
+                                             "block_nnz", "block_k",
+                                             "slabs_per_block", "interpret"))
+def ccs_spmm(data: jax.Array, rows: jax.Array, indptr: jax.Array,
+             x: jax.Array, *, n_rows: int, block_cols: int = 256,
+             block_nnz: int = 2048, block_k: int = 128,
+             slabs_per_block: int = 0, interpret: bool = True) -> jax.Array:
+    """Y = A @ X, A in CCS, X (n_cols, k) -> Y (n_rows, k) float32.
+
+    Grid = (k_blocks, col_blocks, slabs); the k axis is parallel (each k
+    block owns its own (n_rows, block_k) output panel), columns and slabs
+    accumulate sequentially into it."""
+    n_cols = indptr.shape[0] - 1
+    kk = x.shape[1]
+    assert kk % block_k == 0, (kk, block_k)
+    c = -(-n_cols // block_cols)
+    total = -(-data.shape[0] // block_nnz)
+    spb, slab_start = _slab_schedule(indptr, c, block_cols, block_nnz,
+                                     total, slabs_per_block)
+    win = _row_windows(indptr, n_cols, block_cols)
+    data = _pad_slabs(data, total, block_nnz)
+    rows = _pad_slabs(rows, total, block_nnz)
+    xp = _pad_cols(x, block_cols)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(kk // block_k, c, spb),
+        in_specs=[
+            pl.BlockSpec((block_nnz,), lambda kb, i, j, s: (s[i] + j,)),
+            pl.BlockSpec((block_nnz,), lambda kb, i, j, s: (s[i] + j,)),
+            pl.BlockSpec((1, block_cols + 1), lambda kb, i, j, s: (i, 0)),
+            pl.BlockSpec((block_cols, block_k), lambda kb, i, j, s: (i, kb)),
+        ],
+        out_specs=pl.BlockSpec((n_rows, block_k),
+                               lambda kb, i, j, s: (0, kb)),
+    )
+    return pl.pallas_call(
+        functools.partial(_ccs_spmm_kernel, interpret, c > 1),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rows, kk), jnp.float32),
+        interpret=interpret,
+    )(slab_start.astype(jnp.int32), data, rows, win, xp)

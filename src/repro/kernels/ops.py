@@ -19,20 +19,26 @@ Responsibilities:
 CSR is served by the native row-segmented kernel (``kernels/csr_spmv.py``);
 the old CSR-via-COO detour survives only as ``spmv_csr_via_coo`` /
 ``spmm_csr_via_coo`` so benchmarks can measure what replacing it bought.
+CCS is served by the column-segmented mirror (``kernels/ccs_spmv.py``) —
+every registered base format now has a native kernel.  SELL accepts a
+*per-bucket* launch geometry (a ``TileGeometry`` carrying a
+``buckets`` table, a ``{width: TileGeometry}`` mapping, or a positional
+sequence) so each bucket launches with its own tile shape.
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dispatch as _dispatch
-from repro.core.formats import BCSR, COO, CSR, ELL, BucketedELL
+from repro.core.formats import BCSR, CCS, COO, CSR, ELL, BucketedELL
 from repro.core.kernel_tune import TileGeometry
 from . import bcsr_spmv as _bcsr
+from . import ccs_spmv as _ccsk
 from . import coo_spmv as _coo
 from . import csr_spmv as _csr
 from . import ell_spmv as _ell
@@ -226,7 +232,8 @@ def spmv_csr(m: CSR, x: jax.Array, interpret: Optional[bool] = None,
     """CSR through the native row-segmented kernel (no COO detour)."""
     br = _geom(tuning, "block_rows", min(256, _align8(m.n_rows)),
                cap=_align8(m.n_rows))
-    bn = _geom(tuning, "block_nnz", min(2048, _align8(m.nnz_pad)))
+    bn = _geom(tuning, "block_nnz", min(2048, _align8(m.nnz_pad)),
+               cap=_align8(m.nnz_pad))
     spb = _csr_slab_bound(m, br, bn, tuning)
     y = _csr.csr_spmv(jnp.asarray(m.data), jnp.asarray(m.cols),
                       jnp.asarray(m.indptr), x, block_rows=br, block_nnz=bn,
@@ -239,7 +246,8 @@ def spmm_csr(m: CSR, x: jax.Array, interpret: Optional[bool] = None,
     k = x.shape[1]
     br = _geom(tuning, "block_rows", min(256, _align8(m.n_rows)),
                cap=_align8(m.n_rows))
-    bn = _geom(tuning, "block_nnz", min(2048, _align8(m.nnz_pad)))
+    bn = _geom(tuning, "block_nnz", min(2048, _align8(m.nnz_pad)),
+               cap=_align8(m.nnz_pad))
     bk = _geom(tuning, "block_k", _block_k(k), cap=_align8(k))
     spb = _csr_slab_bound(m, br, bn, tuning)
     xp = _pad_to(x, 1, bk)
@@ -278,6 +286,56 @@ def spmm_csr_via_coo(m: CSR, x: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# CCS — native column-segmented kernel (kernels/ccs_spmv.py)
+# ---------------------------------------------------------------------------
+def _ccs_slab_bound(m: CCS, bc: int, bn: int,
+                    tuning: Optional[TileGeometry]) -> int:
+    """Static slab-coverage bound over the *column* pointer: exact when the
+    index structure is concrete; from the tuned geometry under trace; 0
+    (always-correct full sweep) otherwise."""
+    ip = m.indptr
+    if not isinstance(ip, jax.core.Tracer):
+        return _ccsk.slabs_needed(np.asarray(ip), bc, bn)
+    if tuning is not None and tuning.slabs_per_block is not None:
+        return int(tuning.slabs_per_block)
+    return 0
+
+
+def spmv_ccs(m: CCS, x: jax.Array, interpret: Optional[bool] = None,
+             tuning: Optional[TileGeometry] = None) -> jax.Array:
+    """CCS through the native column-segmented kernel.  ``block_rows`` is
+    the segmented-axis tile, so for CCS it tiles *columns* (the kernel's
+    ``block_cols``) — one knob, one meaning: rows for CSR, columns here."""
+    bc = _geom(tuning, "block_rows", min(256, _align8(m.n_cols)),
+               cap=_align8(m.n_cols))
+    bn = _geom(tuning, "block_nnz", min(2048, _align8(m.nnz_pad)),
+               cap=_align8(m.nnz_pad))
+    spb = _ccs_slab_bound(m, bc, bn, tuning)
+    y = _ccsk.ccs_spmv(jnp.asarray(m.data), jnp.asarray(m.rows),
+                       jnp.asarray(m.indptr), x, n_rows=m.n_rows,
+                       block_cols=bc, block_nnz=bn, slabs_per_block=spb,
+                       interpret=_interpret(interpret))
+    return y.astype(jnp.result_type(m.data.dtype, x.dtype))
+
+
+def spmm_ccs(m: CCS, x: jax.Array, interpret: Optional[bool] = None,
+             tuning: Optional[TileGeometry] = None) -> jax.Array:
+    k = x.shape[1]
+    bc = _geom(tuning, "block_rows", min(256, _align8(m.n_cols)),
+               cap=_align8(m.n_cols))
+    bn = _geom(tuning, "block_nnz", min(2048, _align8(m.nnz_pad)),
+               cap=_align8(m.nnz_pad))
+    bk = _geom(tuning, "block_k", _block_k(k), cap=_align8(k))
+    spb = _ccs_slab_bound(m, bc, bn, tuning)
+    xp = _pad_to(x, 1, bk)
+    y = _ccsk.ccs_spmm(jnp.asarray(m.data), jnp.asarray(m.rows),
+                       jnp.asarray(m.indptr), xp, n_rows=m.n_rows,
+                       block_cols=bc, block_nnz=bn, block_k=bk,
+                       slabs_per_block=spb, interpret=_interpret(interpret))
+    return y[:, :k].astype(jnp.result_type(m.data.dtype, x.dtype))
+
+
+# ---------------------------------------------------------------------------
 # BCSR — block-tiled kernel (kernels/bcsr_spmv.py)
 # ---------------------------------------------------------------------------
 def _bcsr_geometry(m: BCSR, tuning: Optional[TileGeometry]):
@@ -307,8 +365,15 @@ def exact_slab_bound(m, tuning: Optional[TileGeometry] = None) -> int:
     if isinstance(m, CSR):
         br = _geom(t, "block_rows", min(256, _align8(m.n_rows)),
                    cap=_align8(m.n_rows))
-        bn = _geom(t, "block_nnz", min(2048, _align8(m.nnz_pad)))
+        bn = _geom(t, "block_nnz", min(2048, _align8(m.nnz_pad)),
+                   cap=_align8(m.nnz_pad))
         return _csr.slabs_needed(np.asarray(m.indptr), br, bn)
+    if isinstance(m, CCS):
+        bc = _geom(t, "block_rows", min(256, _align8(m.n_cols)),
+                   cap=_align8(m.n_cols))
+        bn = _geom(t, "block_nnz", min(2048, _align8(m.nnz_pad)),
+                   cap=_align8(m.nnz_pad))
+        return _ccsk.slabs_needed(np.asarray(m.indptr), bc, bn)
     if isinstance(m, BCSR):
         return _bcsr_geometry(m, t)[2]
     raise TypeError(f"no slab-coverage bound for {type(m)}")
@@ -341,28 +406,58 @@ def spmm_bcsr(m: BCSR, x: jax.Array, interpret: Optional[bool] = None,
 # ---------------------------------------------------------------------------
 # SELL / hybrid containers
 # ---------------------------------------------------------------------------
+SellTuning = Union[TileGeometry, Sequence[Optional[TileGeometry]],
+                   Mapping[int, TileGeometry]]
+
+
+def _sell_tunings(m: BucketedELL, tuning: Optional[SellTuning]
+                  ) -> Tuple[Optional[TileGeometry], ...]:
+    """Resolve the per-bucket launch geometry for a SELL container.
+
+    ``tuning`` may be: ``None`` (defaults everywhere); one
+    :class:`TileGeometry` — broadcast, unless it carries a ``buckets``
+    table, in which case each bucket looks up its *width* and falls back
+    to the table-less top-level knobs; a ``{width: TileGeometry}`` mapping;
+    or a positional sequence (one entry per bucket, ``None`` allowed)."""
+    n = len(m.buckets)
+    if tuning is None:
+        return (None,) * n
+    if isinstance(tuning, Mapping):
+        return tuple(tuning.get(b.width) for b in m.buckets)
+    if isinstance(tuning, (list, tuple)):
+        if len(tuning) != n:
+            raise ValueError(f"per-bucket tuning sequence has {len(tuning)} "
+                             f"entries for {n} buckets")
+        return tuple(tuning)
+    if tuning.buckets:
+        table = dict(tuning.buckets)
+        base = tuning.broadcast()
+        return tuple(table.get(b.width, base) for b in m.buckets)
+    return (tuning,) * n
+
+
 def spmv_sell(m: BucketedELL, x: jax.Array,
               interpret: Optional[bool] = None,
-              tuning: Optional[TileGeometry] = None) -> jax.Array:
+              tuning: Optional[SellTuning] = None) -> jax.Array:
     # an all-zero matrix may carry an empty bucket list — the product is
     # exactly zeros of (n_rows,) in x's dtype, not None
     perm = jnp.asarray(m.perm)
     y = jnp.zeros((m.n_rows,), x.dtype)
-    for off, b in zip(m.row_offsets, m.buckets):
+    for off, b, g in zip(m.row_offsets, m.buckets, _sell_tunings(m, tuning)):
         yb = ell_spmv_raw(jnp.asarray(b.data), jnp.asarray(b.cols), x,
-                          interpret, tuning)
+                          interpret, g)
         y = y.at[perm[off:off + b.n_rows]].set(yb.astype(y.dtype))
     return y
 
 
 def spmm_sell(m: BucketedELL, x: jax.Array,
               interpret: Optional[bool] = None,
-              tuning: Optional[TileGeometry] = None) -> jax.Array:
+              tuning: Optional[SellTuning] = None) -> jax.Array:
     perm = jnp.asarray(m.perm)
     y = jnp.zeros((m.n_rows, x.shape[1]), x.dtype)
-    for off, b in zip(m.row_offsets, m.buckets):
+    for off, b, g in zip(m.row_offsets, m.buckets, _sell_tunings(m, tuning)):
         yb = ell_spmm_raw(jnp.asarray(b.data), jnp.asarray(b.cols), x,
-                          interpret, tuning)
+                          interpret, g)
         y = y.at[perm[off:off + b.n_rows]].set(yb.astype(y.dtype))
     return y
 
@@ -404,6 +499,7 @@ def spmm_hybrid(m, x: jax.Array,
 # ---------------------------------------------------------------------------
 for _fmt, _spmv_fn, _spmm_fn in (
     ("csr", spmv_csr, spmm_csr),
+    ("ccs", spmv_ccs, spmm_ccs),
     ("coo_row", spmv_coo, spmm_coo),
     ("coo_col", spmv_coo, spmm_coo),
     ("ell_row", spmv_ell, spmm_ell),
@@ -430,6 +526,7 @@ def __getattr__(name: str):
 __all__ = ["ell_spmv_raw", "ell_spmm_raw", "coo_spmv_raw", "coo_spmm_raw",
            "ell_spmv_ad", "spmv_ell", "spmm_ell", "spmv_coo", "spmm_coo",
            "spmv_csr", "spmm_csr", "spmv_csr_via_coo", "spmm_csr_via_coo",
+           "spmv_ccs", "spmm_ccs",
            "spmv_bcsr", "spmm_bcsr", "exact_slab_bound",
            "spmv_sell", "spmm_sell",
            "spmv_hybrid", "spmm_hybrid", "KERNEL_SPMV_IMPLS",

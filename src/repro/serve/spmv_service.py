@@ -148,7 +148,7 @@ class SpMVService:
                 except (KeyError, TypeError):
                     continue
                 g = rec.geometry
-                if f in ("csr", "bcsr"):
+                if f in ("csr", "ccs", "bcsr"):
                     spb = max(exact_slab_bound(b, g) for b in blocks)
                     g = replace(g, slabs_per_block=spb)
                 per_fmt[f] = g

@@ -1,13 +1,15 @@
-"""Native row-segmented CSR and block-tiled BCSR Pallas kernels vs the
-dense oracle: SpMV + SpMM for B in {1, 3, 128}, ragged shapes, geometry
-sweeps, and the traced (full-sweep / tuned-bound) launch modes."""
+"""Native row-segmented CSR, column-segmented CCS and block-tiled BCSR
+Pallas kernels vs the dense oracle: SpMV + SpMM for B in {1, 3, 128},
+ragged shapes, geometry sweeps, and the traced (full-sweep / tuned-bound)
+launch modes."""
 import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
 
 from repro.core.kernel_tune import TileGeometry
-from repro.core.transform import csr_from_dense, host_csr_to_bcsr
+from repro.core.transform import (csr_from_dense, host_csr_to_bcsr,
+                                  host_csr_to_ccs)
 from repro.kernels import ops
 from repro.kernels.csr_spmv import slabs_needed
 
@@ -100,6 +102,32 @@ def test_csr_heavy_tail_rows(rng):
     np.testing.assert_allclose(np.asarray(got), dense @ x, **TOL)
 
 
+def test_csr_big_matrix_geometry_on_tiny_matrix(rng, monkeypatch):
+    """A D_mat-nearest geometry recorded on a much larger matrix may carry
+    a block_nnz far beyond this matrix's nnz_pad; the wrapper must clamp
+    it to the matrix (it used to be the only knob passed through _geom
+    with no cap, silently inflating every slab to the foreign size)."""
+    dense = random_dense(rng, 24, 16, 0.3)
+    m = csr_from_dense(dense, pad=8)
+    x = rng.normal(size=16).astype(np.float32)
+    X = rng.normal(size=(16, 3)).astype(np.float32)
+    big = TileGeometry(block_rows=512, block_nnz=65536)
+    seen = []
+    for name in ("csr_spmv", "csr_spmm"):
+        orig = getattr(ops._csr, name)
+
+        def spy(*args, _orig=orig, **kw):
+            seen.append(kw["block_nnz"])
+            return _orig(*args, **kw)
+
+        monkeypatch.setattr(ops._csr, name, spy)
+    got = ops.spmv_csr(m, jnp.asarray(x), interpret=True, tuning=big)
+    np.testing.assert_allclose(np.asarray(got), dense @ x, **TOL)
+    gotm = ops.spmm_csr(m, jnp.asarray(X), interpret=True, tuning=big)
+    np.testing.assert_allclose(np.asarray(gotm), dense @ X, **TOL)
+    assert seen and all(bn <= ops._align8(m.nnz_pad) for bn in seen), seen
+
+
 def test_slabs_needed_exact(rng):
     indptr = np.array([0, 3, 3, 10, 64, 64, 64, 65, 130], np.int32)
     # blocks of 4 rows, slab 64: block0 covers slab {0}, block1 slabs {1,2}
@@ -157,12 +185,96 @@ def test_bcsr_traced(rng):
 
 
 # ---------------------------------------------------------------------------
-# the registry serves the native kernels (no COO detour)
+# CCS column-segmented kernel (the paper's Phase-I format, last to go native)
 # ---------------------------------------------------------------------------
-def test_registry_serves_native_csr_and_bcsr():
+@pytest.mark.parametrize("n_rows,n_cols,density", [
+    (256, 256, 0.05),    # aligned
+    (100, 61, 0.2),      # ragged, denser
+    (37, 513, 0.02),     # wide: many column blocks
+    (8, 8, 0.5),         # minimum tile
+])
+def test_ccs_spmv_vs_dense(rng, n_rows, n_cols, density):
+    dense = random_dense(rng, n_rows, n_cols, density)
+    m = host_csr_to_ccs(csr_from_dense(dense, pad=8))
+    x = rng.normal(size=n_cols).astype(np.float32)
+    got = ops.spmv_ccs(m, jnp.asarray(x), interpret=True)
+    np.testing.assert_allclose(np.asarray(got), dense @ x, **TOL)
+
+
+@pytest.mark.parametrize("batch", [1, 3, 128])
+def test_ccs_spmm_vs_dense(rng, batch):
+    dense = random_dense(rng, 150, 90, 0.1)
+    m = host_csr_to_ccs(csr_from_dense(dense, pad=8))
+    X = rng.normal(size=(90, batch)).astype(np.float32)
+    got = ops.spmm_ccs(m, jnp.asarray(X), interpret=True)
+    np.testing.assert_allclose(np.asarray(got), dense @ X, **TOL)
+
+
+@pytest.mark.parametrize("g", [
+    TileGeometry(block_rows=8, block_nnz=1024),
+    TileGeometry(block_rows=64, block_nnz=1024),
+    TileGeometry(block_rows=512, block_nnz=8192),
+    TileGeometry(block_rows=32, block_nnz=64, block_k=8),
+], ids=["c8", "c64", "c512-bn8192", "spmm-k8"])
+def test_ccs_geometry_sweep(rng, g):
+    dense = random_dense(rng, 120, 200, 0.15)
+    m = host_csr_to_ccs(csr_from_dense(dense, pad=8))
+    x = rng.normal(size=200).astype(np.float32)
+    X = rng.normal(size=(200, 5)).astype(np.float32)
+    got = ops.spmv_ccs(m, jnp.asarray(x), interpret=True, tuning=g)
+    np.testing.assert_allclose(np.asarray(got), dense @ x, **TOL)
+    gotm = ops.spmm_ccs(m, jnp.asarray(X), interpret=True, tuning=g)
+    np.testing.assert_allclose(np.asarray(gotm), dense @ X, **TOL)
+
+
+def test_ccs_traced_full_sweep_and_tuned_bound(rng):
+    """Under jit the column pointer is abstract: with no geometry the
+    kernel takes the always-correct full slab sweep; a tuned geometry
+    carries the exact static slab bound into the trace."""
+    dense = random_dense(rng, 80, 120, 0.1)
+    m = host_csr_to_ccs(csr_from_dense(dense, pad=8))
+    x = jnp.asarray(rng.normal(size=120).astype(np.float32))
+    y0 = jax.jit(lambda mm, v: ops.spmv_ccs(mm, v, interpret=True))(m, x)
+    np.testing.assert_allclose(np.asarray(y0), dense @ np.asarray(x), **TOL)
+    g = TileGeometry(block_rows=32, block_nnz=512,
+                     slabs_per_block=slabs_needed(m.indptr, 32, 512))
+    y1 = jax.jit(lambda mm, v: ops.spmv_ccs(mm, v, interpret=True,
+                                            tuning=g))(m, x)
+    np.testing.assert_allclose(np.asarray(y1), dense @ np.asarray(x), **TOL)
+
+
+def test_ccs_heavy_tail_and_empty_columns(rng):
+    """A few dense columns plus entirely empty columns (the transpose of
+    the memplus/torso row pathology) still fit the per-column-block slab
+    coverage, and empty columns contribute exactly nothing."""
+    n_rows, n_cols = 200, 128
+    dense = np.zeros((n_rows, n_cols), np.float32)
+    dense[:, 5] = rng.normal(size=n_rows)            # one dense column
+    dense[:150, 70] = rng.normal(size=150)
+    mask = rng.random((n_rows, n_cols)) < 0.01       # sparse elsewhere
+    dense += mask * rng.normal(size=dense.shape).astype(np.float32)
+    dense[:, 30:40] = 0.0                            # a run of empty columns
+    m = host_csr_to_ccs(csr_from_dense(dense.astype(np.float32), pad=8))
+    assert (np.diff(np.asarray(m.indptr))[30:40] == 0).all()
+    x = rng.normal(size=n_cols).astype(np.float32)
+    got = ops.spmv_ccs(m, jnp.asarray(x), interpret=True,
+                       tuning=TileGeometry(block_rows=32, block_nnz=64))
+    np.testing.assert_allclose(np.asarray(got), dense @ x, **TOL)
+    X = rng.normal(size=(n_cols, 3)).astype(np.float32)
+    gotm = ops.spmm_ccs(m, jnp.asarray(X), interpret=True,
+                        tuning=TileGeometry(block_rows=32, block_nnz=64))
+    np.testing.assert_allclose(np.asarray(gotm), dense @ X, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# the registry serves the native kernels (no COO detour, no reference CCS)
+# ---------------------------------------------------------------------------
+def test_registry_serves_native_csr_ccs_and_bcsr():
     from repro.core import dispatch
     assert dispatch.get_impl("csr", "spmv", tier="kernel") is ops.spmv_csr
     assert dispatch.get_impl("csr", "spmm", tier="kernel") is ops.spmm_csr
+    assert dispatch.get_impl("ccs", "spmv", tier="kernel") is ops.spmv_ccs
+    assert dispatch.get_impl("ccs", "spmm", tier="kernel") is ops.spmm_ccs
     assert dispatch.get_impl("bcsr", "spmv", tier="kernel") is ops.spmv_bcsr
     assert dispatch.get_impl("bcsr", "spmm", tier="kernel") is ops.spmm_bcsr
 

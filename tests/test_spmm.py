@@ -17,7 +17,8 @@ from repro.core.transform import (TRANSFORMS_HOST, csr_from_dense,
                                   host_csr_to_sell)
 from repro.serve import SpMVService
 
-# every registered format, including the two outside FORMAT_NAMES
+# every registered format (FORMAT_NAMES is now derived from the registry,
+# so the literal here is a deliberate second witness, not a copy)
 ALL_FORMATS = ("csr", "coo_row", "coo_col", "ccs", "ell_row", "ell_col",
                "sell", "bcsr", "hybrid")
 
@@ -59,10 +60,17 @@ def test_kernel_tables_are_registry_views():
     from repro.kernels.ops import KERNEL_SPMM_IMPLS, KERNEL_SPMV_IMPLS
     assert KERNEL_SPMV_IMPLS == dispatch.impl_table("spmv", "kernel")
     assert KERNEL_SPMM_IMPLS == dispatch.impl_table("spmm", "kernel")
-    # formats without a Pallas kernel fall back to the reference tier
+    # a format without a kernel-tier entry falls back to the reference tier
+    assert not dispatch.has_impl("dense", "spmm", tier="kernel")
+    dispatch.register_impl("dense", "spmm", lambda m, x: m @ x)
+    try:
+        assert dispatch.get_impl("dense", "spmm", tier="kernel") \
+            is dispatch.get_impl("dense", "spmm", tier="reference")
+    finally:
+        dispatch._IMPLS.pop(("dense", "spmm", "reference"))
+    # ccs, bcsr and csr are served by native kernels, not fallbacks/detours
     assert dispatch.get_impl("ccs", "spmm", tier="kernel") \
-        is dispatch.get_impl("ccs", "spmm", tier="reference")
-    # bcsr and csr are served by native kernels, not fallbacks or detours
+        is not dispatch.get_impl("ccs", "spmm", tier="reference")
     assert dispatch.get_impl("bcsr", "spmm", tier="kernel") \
         is not dispatch.get_impl("bcsr", "spmm", tier="reference")
     assert dispatch.get_impl("csr", "spmv", tier="kernel") is ops.spmv_csr
@@ -360,5 +368,44 @@ def test_service_register_with_tuner_serves_tuned_kernels(rng):
     np.testing.assert_allclose(np.asarray(svc.spmv("m", jnp.asarray(x))),
                                dense @ x, rtol=1e-4, atol=1e-4)
     X = rng.normal(size=(64, 4)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(svc.spmm("m", jnp.asarray(X))),
+                               dense @ X, rtol=1e-4, atol=1e-4)
+
+
+def test_service_sell_blocks_carry_per_bucket_geometry(rng):
+    """A sell block registered through the service is tuned per bucket:
+    the baked geometry carries a width-keyed table, and queries serve
+    through it (the serve-side half of the per-bucket SELL story)."""
+    from repro.core.autotune import MachineModel
+    from repro.core.kernel_tune import KernelTuner
+    from repro.core.policy import MemoryPolicy
+
+    def width_timer(thunk, g):
+        thunk()
+        return 1.0 if g is None else 0.5 - (g.block_w or 0) * 1e-3
+
+    # skewed rows so the sell transform produces a real bucket structure
+    dense = np.zeros((128, 96), np.float32)
+    for r in range(16):
+        dense[r, rng.choice(96, 50, replace=False)] = rng.normal(size=50)
+    for r in range(16, 128):
+        dense[r, rng.choice(96, 6, replace=False)] = rng.normal(size=6)
+    m = csr_from_dense(dense, pad=8)
+    svc = SpMVService(tuner=KernelTuner(timer=width_timer, interpret=True),
+                      strategy="fixed",
+                      # steer the block decision onto sell: csr priced out,
+                      # sell's padded footprint allowed
+                      model=MachineModel(segment_penalty=1e4),
+                      policy=MemoryPolicy(budget_ratio=10.0))
+    svc.register("m", m, measure_baseline=False, formats=("sell",))
+    st = svc.stats()["m"]
+    assert st["formats"] == {"sell": 1}, st["formats"]
+    for op in ("spmv", "spmm"):
+        tuned = st["tuned"][op].get("sell")
+        assert tuned is not None and tuned.get("buckets"), (op, tuned)
+    x = rng.normal(size=96).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(svc.spmv("m", jnp.asarray(x))),
+                               dense @ x, rtol=1e-4, atol=1e-4)
+    X = rng.normal(size=(96, 4)).astype(np.float32)
     np.testing.assert_allclose(np.asarray(svc.spmm("m", jnp.asarray(X))),
                                dense @ X, rtol=1e-4, atol=1e-4)

@@ -13,7 +13,7 @@ from .common import print_rows
 
 
 SECTIONS = ("table1", "fig56", "fig7", "fig8", "hybrid", "spmm_batch",
-            "moe", "kernels", "roofline")
+            "dstar", "moe", "kernels", "roofline")
 
 
 def main() -> None:
@@ -44,6 +44,7 @@ def main() -> None:
     section("fig8", fig8_graph.run, **scale_kw)
     section("hybrid", hybrid_blocks.run, **scale_kw)
     section("spmm_batch", spmm_batch.run, **scale_kw)
+    section("dstar", spmm_batch.dstar_sweep, **scale_kw)
     section("moe", moe_dispatch.run)
     section("kernels", kernels_bench.run)
     section("roofline", roofline.run)

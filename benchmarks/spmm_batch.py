@@ -25,8 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import spmm, spmv
-from repro.core.autotune import time_fn
-from repro.core.suite import TABLE1, synthesize
+from repro.core.autotune import offline_phase, time_fn
+from repro.core.suite import TABLE1, paper_suite, synthesize
 from repro.core.transform import TRANSFORMS_HOST
 
 from .common import ITERS, Row, SCALE
@@ -34,6 +34,7 @@ from .common import ITERS, Row, SCALE
 BATCHES = (1, 8, 32, 128)
 FORMATS = ("csr", "sell", "hybrid")
 MATRICES = ("memplus", "torso1")
+DSTAR_FORMATS = ("ell_row", "sell", "coo_row")
 
 
 def _bench_matrix(name: str, csr, batches, formats, iters: int) -> List[Row]:
@@ -68,14 +69,43 @@ def run(scale: float = SCALE, iters: int = ITERS,
     return rows
 
 
+def dstar_sweep(scale: float = SCALE, iters: int = ITERS,
+                batches=BATCHES, formats=DSTAR_FORMATS) -> List[Row]:
+    """Per-B D* crossover table: re-run the off-line phase at each batch
+    width and report the learned threshold D*_f.
+
+    The batch-aware rule ``k * B * (t_crs - t_f) > t_trans`` predicts D*
+    grows with B (a transformation amortized over B-wide panels tolerates
+    a heavier tail), so the table is the measured crossover of format f
+    becoming profitable as a function of batch — the ROADMAP follow-up to
+    the PR-2/PR-4 serving work, landed in docs/serving.md."""
+    suite = paper_suite(scale=scale, skip_ell_overflow=True)
+    rows: List[Row] = []
+    for b in batches:
+        db = offline_phase(suite, formats=formats, iters=iters, batch=b,
+                           machine=f"dstar-B{b}")
+        for f in formats:
+            # also report the mean measured R at this batch, for context
+            rs = [r.formats[f].r for r in db.records if f in r.formats]
+            rows.append(Row(
+                name=f"dstar/B{b}/{f}", us_per_call=0.0,
+                derived={"batch": b, "d_star": f"{db.d_star[f]:.3f}",
+                         "mean_r": f"{sum(rs) / max(len(rs), 1):.2f}"}))
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=SCALE)
     ap.add_argument("--iters", type=int, default=ITERS)
     ap.add_argument("--json", default=None,
                     help="also write results as JSON (CI artifact)")
+    ap.add_argument("--dstar", action="store_true",
+                    help="also run the per-B D* crossover sweep")
     args = ap.parse_args()
     rows = run(scale=args.scale, iters=args.iters)
+    if args.dstar:
+        rows.extend(dstar_sweep(scale=args.scale, iters=args.iters))
     from .common import print_rows
     print_rows(rows)
     if args.json:

@@ -15,8 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (AutoTunedSpMV, MatrixStats, csr_from_rows,
-                        offline_phase, spmv)
+from repro import MatrixStats, Planner, csr_from_rows, offline_phase
+from repro.core import spmv
 from repro.core.suite import paper_suite
 
 
@@ -71,13 +71,14 @@ def main():
 
     print("== auto-tuned (includes run-time transformation) ==")
     t0 = time.perf_counter()
-    op = AutoTunedSpMV(A, db=db, rule="generalized",
-                       expected_iterations=150)
-    _ = op(b).block_until_ready()
-    x_at, res = cg(op, b)
+    plan = Planner(db=db).plan(A, rule="generalized",
+                               expected_iterations=150)
+    P = plan.bind(A, db=db)
+    _ = (P @ b).block_until_ready()
+    x_at, res = cg(P, b)
     t_at = time.perf_counter() - t0
-    print(f"{op.decision.fmt:6s}: {t_at*1e3:8.1f} ms  residual={res:.2e}  "
-          f"(decision rule={op.decision.rule})")
+    print(f"{plan.fmt:6s}: {t_at*1e3:8.1f} ms  residual={res:.2e}  "
+          f"(decision rule={plan.rule})")
     print(f"speedup including transformation: {t_crs / t_at:.2f}x")
     np.testing.assert_allclose(np.asarray(x_crs), np.asarray(x_at),
                                rtol=1e-3, atol=1e-4)

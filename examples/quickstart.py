@@ -1,11 +1,15 @@
 """Quickstart: auto-tuned run-time sparse-format transformation in ~30 lines.
 
+Off-line, learn the machine's D_mat–R graph once; on-line, one `Planner`
+call turns a CSR matrix into a portable `ExecutionPlan` (decision rule +
+format + transform recipe + launch geometry) that binds to the matrix and
+serves `y = P @ x`.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 
-from repro.core import (AutoTunedSpMV, MatrixStats, offline_phase,
-                        decide_paper)
+from repro import ExecutionPlan, MatrixStats, Planner, offline_phase
 from repro.core.suite import paper_suite, synthesize, TABLE1
 
 # ---- off-line phase (once per machine): learn D* from a benchmark suite --
@@ -15,17 +19,21 @@ db = offline_phase(suite, formats=("ell_row", "sell", "coo_row"),
 print("learned D* per format:", {k: round(v, 3)
                                  for k, v in db.d_star.items()})
 
-# ---- on-line phase (every library call): D_mat -> format decision --------
+# ---- on-line phase (every library call): D_mat -> plan -> bind -----------
+planner = Planner(db=db)
 for name in ("chem_master1", "memplus"):          # uniform vs heavy-tailed
     spec = next(s for s in TABLE1 if s.name == name)
     A = synthesize(spec, scale=0.05)
     stats = MatrixStats.of(A)
-    decision = decide_paper(db, stats, fmt="ell_row")
-    print(f"{name}: D_mat={stats.d_mat:.3f}  D*={decision.d_star:.3f}"
-          f"  -> {decision.fmt}")
+    plan = planner.plan(A, rule="paper")          # transforms if profitable
+    print(f"{name}: D_mat={stats.d_mat:.3f}  D*={plan.d_star:.3f}"
+          f"  -> {plan.fmt}")
 
-    op = AutoTunedSpMV(A, db=db, rule="paper")    # transforms if profitable
+    # the plan is a portable JSON artifact: save it, reload it anywhere,
+    # bind it to the matrix, and serve SpMV (and SpMM) via `@`
+    plan2 = ExecutionPlan.from_json(plan.to_json())
+    P = plan2.bind(A)
     x = jnp.ones((A.n_cols,), jnp.float32)
-    y = op(x)
+    y = P @ x
     print(f"  SpMV ok: ||y||={float(jnp.linalg.norm(y)):.3f} "
-          f"(format={op.decision.fmt})")
+          f"(format={P.fmt}, rule={plan2.rule})")

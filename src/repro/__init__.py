@@ -1,4 +1,37 @@
 """repro — auto-tuned run-time sparse-format transformation for SpMV
-(Katagiri & Sato) built out as a multi-pod JAX training/serving framework."""
+(Katagiri & Sato) built out as a multi-pod JAX training/serving framework.
+
+The public API is the plan pipeline (see ``repro.api`` and
+``docs/plans.md``)::
+
+    from repro import Planner, ExecutionPlan
+
+    plan = Planner(db=db).plan(csr)      # decide + tune, one artifact
+    plan.save("plan.json")
+    P = ExecutionPlan.load("plan.json").bind(csr)
+    y = P @ x
+
+Attribute access is lazy so ``import repro`` stays lightweight; the full
+surface lives in :mod:`repro.api`.
+"""
 
 __version__ = "0.1.0"
+
+# lazily re-exported from repro.api (keeps `import repro` free of jax)
+_API_EXPORTS = (
+    "Planner", "ExecutionPlan", "PlannedMatrix", "BlockPlan",
+    "TransformRecipe", "PlanFingerprint", "PlanError", "PlanSchemaError",
+    "SpMVService", "TuningDB", "KernelTuner", "TileGeometry",
+    "offline_phase", "MachineModel", "MatrixStats", "csr_from_dense",
+    "csr_from_rows",
+)
+
+__all__ = ["__version__", "api", *_API_EXPORTS]
+
+
+def __getattr__(name: str):
+    if name in _API_EXPORTS or name == "api":
+        import importlib
+        api = importlib.import_module("repro.api")
+        return api if name == "api" else getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

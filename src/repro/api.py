@@ -1,0 +1,70 @@
+"""repro.api — the one-import surface of the auto-tuning pipeline.
+
+The paper's method is a single pipeline: profile the machine (off-line
+phase), read the matrix's D_mat, decide the format, transform at run
+time, launch.  This module is that pipeline as one importable surface,
+organized around the portable decision artifact — the
+:class:`~repro.core.plan.ExecutionPlan`:
+
+    from repro import api
+
+    # off-line, once per machine class: suite timings + kernel geometry
+    db = api.offline_phase(suite, machine="v5e")
+    db.save("tuningdb.v5e.json")
+
+    # plan: decision rule + format + transform recipe + launch geometry,
+    # one versioned JSON artifact
+    planner = api.Planner(db=db, tuner=api.KernelTuner(db=db))
+    plan = planner.plan(csr, batch=8, expected_iterations=1000)
+    plan.save("plan.json")
+
+    # replay anywhere: bind to the matrix and serve
+    P = api.ExecutionPlan.load("plan.json").bind(csr)
+    y = P @ x                      # SpMV
+    Y = P @ X                      # SpMM, X: (n_cols, B)
+
+    # or hand the plan to the serving layer (skips re-tuning)
+    svc = api.SpMVService()
+    svc.register("graph0", csr, plan=plan)
+
+See ``docs/plans.md`` for the plan lifecycle, JSON schema, and the
+migration notes from the deprecated entry points (``AutoTunedSpMV``,
+direct ``decide_*`` calls).
+"""
+from repro.core.autotune import (AutoTunedSpMV, Decision, MachineModel,
+                                 OfflineRecord, TuningDB, decide_cost_model,
+                                 decide_generalized, decide_paper,
+                                 offline_phase)
+from repro.core.formats import (BCSR, BucketedELL, CCS, COO, CSR, ELL,
+                                MatrixStats, memory_bytes)
+from repro.core.kernel_tune import (GeometryRecord, KernelTuner,
+                                    TileGeometry, candidate_geometries,
+                                    nearest_geometry)
+from repro.core.plan import (SCHEMA_VERSION, BlockPlan, ExecutionPlan,
+                             PlanError, PlanFingerprint, PlanSchemaError,
+                             PlannedMatrix, Planner, TransformRecipe,
+                             apply_transform)
+from repro.core.policy import MemoryPolicy
+from repro.core.transform import (TRANSFORMS_HOST, csr_from_dense,
+                                  csr_from_rows)
+from repro.serve import SpMVService
+
+__all__ = [
+    # the plan API (the public face)
+    "SCHEMA_VERSION", "ExecutionPlan", "PlannedMatrix", "Planner",
+    "BlockPlan", "TransformRecipe", "PlanFingerprint", "PlanError",
+    "PlanSchemaError", "apply_transform",
+    # offline phase + persistence
+    "offline_phase", "TuningDB", "OfflineRecord", "MachineModel",
+    # kernel launch-geometry tuning
+    "KernelTuner", "TileGeometry", "GeometryRecord",
+    "candidate_geometries", "nearest_geometry",
+    # serving
+    "SpMVService",
+    # formats + construction
+    "CSR", "CCS", "COO", "ELL", "BCSR", "BucketedELL", "MatrixStats",
+    "memory_bytes", "csr_from_dense", "csr_from_rows", "TRANSFORMS_HOST",
+    # policy + deprecated shims
+    "MemoryPolicy", "Decision", "AutoTunedSpMV",
+    "decide_paper", "decide_generalized", "decide_cost_model",
+]

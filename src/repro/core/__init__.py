@@ -17,5 +17,8 @@ from .autotune import (AutoTunedSpMV, Decision, MachineModel, TuningDB,
                        offline_phase, time_fn)
 from .kernel_tune import (GeometryRecord, KernelTuner, TileGeometry,
                           candidate_geometries, nearest_geometry)
+from .plan import (BlockPlan, ExecutionPlan, PlanError, PlanFingerprint,
+                   PlanSchemaError, PlannedMatrix, Planner, TransformRecipe,
+                   apply_transform)
 from .suite import TABLE1, paper_suite, synthesize, verify_suite
 from .policy import MemoryPolicy

@@ -424,34 +424,57 @@ def decide_cost_model(model: MachineModel, stats: MatrixStats,
 
 
 # ---------------------------------------------------------------------------
-# the user-facing auto-tuned operator
+# the user-facing auto-tuned operator — deprecated shim over the Planner
 # ---------------------------------------------------------------------------
 class AutoTunedSpMV:
-    """On-line-phase wrapper: give it a CSR matrix, it picks the format via
-    the TuningDB (or cost model fallback) and serves jit-compiled SpMV."""
+    """Deprecated: use :class:`repro.Planner` / :class:`repro.ExecutionPlan`.
+
+    This wrapper predates the unified plan API and ignored kernel launch
+    geometry and the batch axis entirely.  It now routes through
+    :class:`~repro.core.plan.Planner`, so it picks up the tuned
+    ``TileGeometry`` (when the TuningDB carries recorded geometries, or a
+    ``tuner`` is passed) and serves SpMM panels through the same
+    ``__call__`` — but new code should hold the :class:`ExecutionPlan`
+    directly::
+
+        plan = Planner(db=db).plan(csr)     # portable, serializable
+        P = plan.bind(csr)
+        y = P @ x                           # SpMV; P @ X serves SpMM
+    """
 
     def __init__(self, csr: CSR, db: Optional[TuningDB] = None,
                  expected_iterations: int = 100,
                  rule: str = "paper",
                  machine_model: Optional[MachineModel] = None,
-                 spmv_impls: Optional[Dict[str, Callable]] = None):
+                 spmv_impls: Optional[Dict[str, Callable]] = None,
+                 tuner: Optional[Any] = None):
+        import warnings
+        warnings.warn(
+            "AutoTunedSpMV is deprecated; use repro.Planner — "
+            "plan = Planner(db=db).plan(csr); y = plan.bind(csr) @ x",
+            DeprecationWarning, stacklevel=2)
+        from .plan import Planner
+        if db is None:
+            rule_eff = "cost_model"
+        elif rule == "paper":
+            rule_eff = "paper"
+        else:
+            rule_eff = "generalized"
+        planner = Planner(db=db, model=machine_model, tuner=tuner,
+                          rule=rule_eff)
+        self.plan = planner.plan(csr, expected_iterations=expected_iterations)
+        self.bound = self.plan.bind(csr, db=db, impls=spmv_impls)
         self.csr = csr
         self.stats = MatrixStats.of(csr)
-        if db is not None and rule == "paper":
-            self.decision = decide_paper(db, self.stats)
-        elif db is not None:
-            self.decision = decide_generalized(db, self.stats,
-                                               expected_iterations)
-        else:
-            self.decision = decide_cost_model(machine_model or MachineModel(),
-                                              self.stats, expected_iterations)
-        fmt = self.decision.fmt
-        self.matrix = TRANSFORMS_HOST[fmt](csr) if fmt != "csr" else csr
-        impl = (spmv_impls or {}).get(fmt, spmv)
-        self._fn = jax.jit(lambda m, x, fn=impl: fn(m, x))
+        self.decision = Decision(fmt=self.plan.fmt, d_mat=self.plan.d_mat,
+                                 d_star=self.plan.d_star,
+                                 rule=self.plan.rule,
+                                 expected_gain=self.plan.expected_gain)
+        self.matrix = self.bound.matrix
 
     def __call__(self, x: jax.Array) -> jax.Array:
-        return self._fn(self.matrix, x)
+        # rank dispatch: 1-D x serves SpMV, (n_cols, B) panels serve SpMM
+        return self.bound @ x
 
 
 __all__ = [

@@ -551,8 +551,8 @@ class KernelTuner:
     def bind(self, impls: Dict[str, Callable],
              tunings: Dict[str, TileGeometry]) -> Dict[str, Callable]:
         """``{fmt: impl}`` with each format's tuned geometry partially
-        applied (formats without a tuned geometry pass through)."""
-        import functools
-        return {f: (functools.partial(fn, tuning=tunings[f])
-                    if f in tunings else fn)
-                for f, fn in impls.items()}
+        applied (formats without a tuned geometry — or whose impl doesn't
+        accept ``tuning=`` — pass through).  Delegates to the shared
+        :func:`repro.core.plan.bind_tunings`."""
+        from .plan import bind_tunings
+        return bind_tunings(impls, tunings)

@@ -178,12 +178,18 @@ def choose_block_format(stats: MatrixStats,
 # ---------------------------------------------------------------------------
 @dataclass
 class BlockDecision:
+    """One row block's outcome.  ``plan`` is the leaf
+    :class:`~repro.core.plan.ExecutionPlan` for the block — the portable
+    decision artifact (format + transform recipe + fingerprint) that the
+    Planner and the serving layer compose into whole-matrix hybrid plans;
+    ``fmt`` is kept as the flat view of ``plan.fmt``."""
     fmt: str
     rows: Tuple[int, int]       # [start, end) in the permuted row space
     d_mat: float
     nnz: int
     bytes: int
     t_transform: float
+    plan: Optional[Any] = None  # core.plan.ExecutionPlan (leaf)
 
 
 @dataclass
@@ -232,6 +238,12 @@ def build_hybrid(m: CSR,
     boundaries = PARTITIONERS[strategy](lens[perm], **strategy_kw)
     t_partition = time.perf_counter() - t0
 
+    # per-block decisions ship as leaf ExecutionPlans (portable artifacts
+    # the Planner / serving layer compose into whole-matrix hybrid plans)
+    from repro.core.plan import leaf_plan
+    rule_used = ("paper" if db is not None and rule == "paper"
+                 else "generalized" if db is not None else "cost_model")
+
     blocks: List[Any] = []
     fmts: List[str] = []
     offsets: List[int] = []
@@ -255,7 +267,10 @@ def build_hybrid(m: CSR,
         offsets.append(s)
         decisions.append(BlockDecision(
             fmt=fmt, rows=(s, e), d_mat=stats.d_mat, nnz=stats.nnz,
-            bytes=memory_bytes(obj), t_transform=dt))
+            bytes=memory_bytes(obj), t_transform=dt,
+            plan=leaf_plan(sub, stats, fmt, rule_used, batch=batch,
+                           expected_iterations=expected_iterations,
+                           machine=db.machine if db is not None else "")))
 
     hyb = HybridMatrix(perm=perm, blocks=tuple(blocks),
                        row_offsets=tuple(offsets), formats=tuple(fmts),

@@ -38,7 +38,7 @@ from __future__ import annotations
 import threading
 import time
 from concurrent.futures import Future
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -48,6 +48,9 @@ from repro.core import dispatch as _dispatch
 from repro.core.autotune import MachineModel, TuningDB, time_fn
 from repro.core.formats import CSR, memory_bytes
 from repro.core.kernel_tune import KernelTuner, TileGeometry
+from repro.core.plan import (BlockPlan, ExecutionPlan, PlanFingerprint,
+                             TransformRecipe, bind_tunings,
+                             blocks_by_format, rederive_slab_bounds)
 from repro.core.spmv import spmv as spmv_ref
 from repro.core.policy import MemoryPolicy
 from repro.partition import HybridReport, build_hybrid, spmm_hybrid, spmv_hybrid
@@ -76,6 +79,8 @@ class MatrixEntry:
     n_spmm_cols: int = 0        # total RHS columns served through spmm
     builds: int = 1             # times this key's operator was (re)built
     tunings: Dict[str, Dict[str, TileGeometry]] = field(default_factory=dict)
+    plan: Optional[ExecutionPlan] = None  # the plan this entry serves
+    from_plan: bool = False     # registration replayed a supplied plan
     # pending entries are (future, vector, enqueue time) — the timestamp
     # drives the deadline flush policy
     pending: List[Tuple[Future, jax.Array, float]] = field(
@@ -114,26 +119,26 @@ class SpMVService:
     entries: Dict[str, MatrixEntry] = field(default_factory=dict)
 
     # -- launch-geometry tuning at registration ------------------------------
-    def _tuned_impls(self, hyb) -> Tuple[Optional[Dict], Optional[Dict],
-                                         Dict[str, Dict[str, TileGeometry]]]:
-        """Run the launch-geometry search once per (op, block format) on
-        the biggest block of that format, and bind the winners into the
-        per-block impl dicts.  For CSR/BCSR the slab-coverage bound is
-        re-derived over *all* blocks of that format (a bound learned on one
-        block must cover its siblings, which share the jitted per-format
-        impl)."""
-        if self.tuner is None:
-            return self.impls, self.spmm_impls, {}
-        from repro.kernels.ops import exact_slab_bound
-        bases = {
+    def _impl_bases(self) -> Dict[str, Dict[str, Callable]]:
+        return {
             "spmv": dict(self.impls) if self.impls is not None
             else _dispatch.impl_table("spmv", "kernel", exclude=("hybrid",)),
             "spmm": dict(self.spmm_impls) if self.spmm_impls is not None
             else _dispatch.impl_table("spmm", "kernel", exclude=("hybrid",)),
         }
-        by_fmt: Dict[str, List] = {}
-        for blk, f in zip(hyb.blocks, hyb.formats):
-            by_fmt.setdefault(f, []).append(blk)
+
+    def _tuned_impls(self, hyb) -> Tuple[Optional[Dict], Optional[Dict],
+                                         Dict[str, Dict[str, TileGeometry]]]:
+        """Run the launch-geometry search once per (op, block format) on
+        the biggest block of that format, and bind the winners into the
+        per-block impl dicts.  For CSR/CCS/BCSR the slab-coverage bound is
+        re-derived over *all* blocks of that format (a bound learned on one
+        block must cover its siblings, which share the jitted per-format
+        impl)."""
+        if self.tuner is None:
+            return self.impls, self.spmm_impls, {}
+        bases = self._impl_bases()
+        by_fmt = blocks_by_format(hyb)
         tunings: Dict[str, Dict[str, TileGeometry]] = {}
         for op, base in bases.items():
             batch = 1 if op == "spmv" else self.max_batch
@@ -147,18 +152,31 @@ class SpMVService:
                                           impl=base[f])
                 except (KeyError, TypeError):
                     continue
-                g = rec.geometry
-                if f in ("csr", "ccs", "bcsr"):
-                    spb = max(exact_slab_bound(b, g) for b in blocks)
-                    g = replace(g, slabs_per_block=spb)
-                per_fmt[f] = g
-            tunings[op] = per_fmt
-        bind = self.tuner.bind
-        return (bind(bases["spmv"], tunings["spmv"]),
-                bind(bases["spmm"], tunings["spmm"]), tunings)
+                per_fmt[f] = rec.geometry
+            tunings[op] = rederive_slab_bounds(per_fmt, by_fmt)
+        return (bind_tunings(bases["spmv"], tunings["spmv"]),
+                bind_tunings(bases["spmm"], tunings["spmm"]), tunings)
+
+    def _plan_impls(self, hyb, plan: ExecutionPlan
+                    ) -> Tuple[Optional[Dict], Optional[Dict],
+                               Dict[str, Dict[str, TileGeometry]]]:
+        """Bind a supplied (fingerprint-matched) plan's recorded launch
+        geometry into the per-block impl dicts — the register-with-plan
+        path that skips the tuner's search entirely.  Reference-tier plans
+        serve through the service's configured impls untouched."""
+        if plan.tier != "kernel":
+            return self.impls, self.spmm_impls, {}
+        by_fmt = blocks_by_format(hyb)
+        tunings = {op: rederive_slab_bounds(per, by_fmt)
+                   for op, per in plan.tunings_by_format().items()}
+        bases = self._impl_bases()
+        return (bind_tunings(bases["spmv"], tunings.get("spmv", {})),
+                bind_tunings(bases["spmm"], tunings.get("spmm", {})),
+                tunings)
 
     def register(self, key: str, csr: CSR, expected_iterations: int = 100,
                  measure_baseline: bool = True, batch: int = 1,
+                 plan: Optional[ExecutionPlan] = None,
                  **build_kw) -> MatrixEntry:
         """Build the per-block-tuned operator for ``csr`` under ``key``.
 
@@ -170,18 +188,37 @@ class SpMVService:
         replaces its operator and releases the stale compiled executables.
         With a ``tuner`` set, registration also searches kernel launch
         geometry per block format and bakes the winners into the jitted
-        dispatchers — queries reuse them for free."""
+        dispatchers — queries reuse them for free.
+
+        ``plan``: a saved :class:`~repro.core.plan.ExecutionPlan`.  When
+        its fingerprint matches ``csr``, registration *replays* it — the
+        recorded per-block decisions and launch geometry are bound
+        directly, skipping both the per-block decision machinery and the
+        tuner's search.  A mismatched plan falls back to a full build (and
+        re-tune); either way the entry's ``plan`` attribute carries the
+        plan this key is serving, so ``register`` without a plan is also
+        how plans are *minted* (``svc.register(...).plan.save(path)``)."""
         # keep the prior operator serving until the replacement is ready —
         # it is popped and released only at the swap below, so concurrent
         # spmv/spmm/submit against this key never see a registration gap
         prior = self.entries.get(key)
         builds = prior.builds + 1 if prior is not None else 1
+        plan_matched = (plan is not None and plan.fingerprint is not None
+                        and plan.fingerprint.matches(csr))
         t0 = time.perf_counter()
-        hyb, report = build_hybrid(
-            csr, strategy=self.strategy, db=self.db, model=self.model,
-            policy=self.policy, expected_iterations=expected_iterations,
-            batch=batch, **build_kw)
-        impls, spmm_impls, tunings = self._tuned_impls(hyb)
+        if plan_matched:
+            hyb, report = plan.materialize(csr)
+            impls, spmm_impls, tunings = self._plan_impls(hyb, plan)
+            entry_plan = plan
+        else:
+            hyb, report = build_hybrid(
+                csr, strategy=self.strategy, db=self.db, model=self.model,
+                policy=self.policy, expected_iterations=expected_iterations,
+                batch=batch, **build_kw)
+            impls, spmm_impls, tunings = self._tuned_impls(hyb)
+            entry_plan = self._derive_plan(csr, hyb, report, tunings,
+                                           expected_iterations, batch,
+                                           build_kw)
         fn = jax.jit(lambda m, x: spmv_hybrid(m, x, impls=impls))
         spmm_fn = jax.jit(
             lambda m, x: spmm_hybrid(m, x, impls=spmm_impls))
@@ -194,7 +231,8 @@ class SpMVService:
             t_hyb = time_fn(fn, hyb, x0, iters=1, warmup=1)
         entry = MatrixEntry(matrix=hyb, report=report, fn=fn,
                             spmm_fn=spmm_fn, t_build=t_build, t_csr=t_csr,
-                            t_hybrid=t_hyb, builds=builds, tunings=tunings)
+                            t_hybrid=t_hyb, builds=builds, tunings=tunings,
+                            plan=entry_plan, from_plan=plan_matched)
         self.entries[key] = entry
         if prior is not None:
             # the old operator was valid to the end: serve its queued
@@ -205,6 +243,41 @@ class SpMVService:
                 pass  # the panel's futures already carry the exception
             self._release(key, prior)
         return entry
+
+    def _derive_plan(self, csr: CSR, hyb, report, tunings,
+                     expected_iterations: int, batch: int,
+                     build_kw: Optional[Dict[str, Any]] = None
+                     ) -> Optional[ExecutionPlan]:
+        """Package a fresh registration as a portable hybrid
+        :class:`ExecutionPlan`: the per-block sub-plans minted by
+        ``build_hybrid`` plus the tuner's per-format geometry winners.
+        Saving it and passing it back to ``register(..., plan=...)`` on
+        the same matrix replays the build with zero re-tuning."""
+        subs = [d.plan for d in report.decisions]
+        if any(s is None for s in subs):
+            return None
+        tier = "kernel" if self.tuner is not None else "reference"
+        for sub in subs:
+            sub.tier = tier
+            for op, per in tunings.items():
+                if sub.fmt in per:
+                    sub.geometry[op] = per[sub.fmt]
+        blocks = [BlockPlan(rows=d.rows, plan=sub)
+                  for d, sub in zip(report.decisions, subs)]
+        # record the build kwargs (partitioner knobs, block formats) so a
+        # fingerprint-mismatched replay re-partitions under the same
+        # recipe the plan was minted with, not the library defaults
+        params = {**(build_kw or {}), "strategy": self.strategy,
+                  "sort_rows": not hyb.identity_perm}
+        fp = PlanFingerprint.of(csr)
+        return ExecutionPlan(
+            fmt="hybrid", rule=subs[0].rule if subs else "cost_model",
+            tier=tier, batch=max(int(batch), 1),
+            expected_iterations=max(int(expected_iterations), 1),
+            transform=TransformRecipe("hybrid", params),
+            fingerprint=fp,
+            machine=self.db.machine if self.db is not None else "cost_model",
+            d_mat=fp.d_mat, d_star=float("nan"), blocks=blocks)
 
     # -- direct paths --------------------------------------------------------
     def spmv(self, key: str, x: jax.Array) -> jax.Array:
@@ -373,6 +446,13 @@ class SpMVService:
                 "compiled": e.compile_count(),
                 "tuned": {op: {f: g.to_dict() for f, g in per.items()}
                           for op, per in e.tunings.items() if per},
+                "plan": (None if e.plan is None else {
+                    "rule": e.plan.rule, "tier": e.plan.tier,
+                    "machine": e.plan.machine,
+                    "schema_version": e.plan.schema_version,
+                    "batch": e.plan.batch,
+                    "from_plan": e.from_plan,   # registration replayed one
+                }),
                 "t_serve_s": e.t_serve,
                 "amortized": (None if saved is None
                               else saved >= e.t_build),

@@ -1,0 +1,67 @@
+"""Telemetry overhead: what an instrumentation site costs.
+
+The observability substrate promises that disabled telemetry is free to
+the hot path — one flag check plus a shared no-op span.  This section
+measures that promise directly: the per-call cost of a representative
+instrumentation site (a span plus a guarded counter, exactly the pattern
+``dispatch``/``transform``/``SpMVService`` use) with telemetry off, on
+with no sinks, and on with an in-memory sink, each expressed as a
+percentage of one CRS SpMV — the smallest unit of real work the library
+does.  The acceptance bar is disabled overhead < 1% of an SpMV.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spmv, time_fn
+from repro.core.suite import paper_suite
+from repro.obs import FakeClock, InMemorySink, Telemetry
+
+from .common import ITERS, Row, SCALE
+
+SITE_CALLS = 20_000
+
+
+def _per_call(fn: Callable[[], None], n: int = SITE_CALLS) -> float:
+    fn()  # warm attribute caches
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n
+
+
+def _site(tel: Telemetry) -> Callable[[], None]:
+    """One representative instrumentation site: a span around the work
+    plus the guarded counter the pipeline's hot paths use."""
+    def site() -> None:
+        with tel.span("bench.site", fmt="csr", op="spmv"):
+            pass
+        if tel.enabled:
+            tel.counter("bench.calls", fmt="csr").inc()
+    return site
+
+
+def run(scale: float = SCALE) -> List[Row]:
+    name, csr = paper_suite(scale=scale, skip_ell_overflow=True,
+                            include=("ex19",))[0]
+    x = jnp.ones((csr.n_cols,), jnp.float32)
+    t_spmv = time_fn(jax.jit(spmv), csr, x, iters=ITERS)
+
+    off = Telemetry()                                   # the default
+    on = Telemetry(enabled=True, clock=FakeClock())
+    sunk = Telemetry(enabled=True, clock=FakeClock(),
+                     sinks=[InMemorySink()])
+    rows: List[Row] = []
+    for label, tel in (("disabled_site", off), ("enabled_span", on),
+                       ("enabled_span_sink", sunk)):
+        t = _per_call(_site(tel))
+        rows.append(Row(
+            name=f"obs/{label}",
+            us_per_call=t * 1e6,
+            derived={"pct_of_spmv": f"{100.0 * t / t_spmv:.4f}",
+                     "spmv_ref": name}))
+    return rows

@@ -1,11 +1,20 @@
 """Benchmark driver — one section per paper table/figure plus the
-integration and roofline suites.  Prints ``name,us_per_call,derived`` CSV.
+integration, kernel, and observability suites.  Prints
+``name,us_per_call,derived`` CSV; ``--json DIR`` additionally writes one
+``BENCH_<section>.json`` snapshot per section (the machine-readable form
+CI archives and ``benchmarks/snapshots/`` pins).
 
-    PYTHONPATH=src python -m benchmarks.run [--only table1,fig8] [--scale S]
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig8]
+        [--scale S] [--quick] [--json DIR]
+
+``--quick`` runs the scale-aware sections at a smoke scale — seconds,
+not minutes — for CI and for refreshing committed snapshots.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -13,7 +22,34 @@ from .common import print_rows
 
 
 SECTIONS = ("table1", "fig56", "fig7", "fig8", "hybrid", "spmm_batch",
-            "dstar", "moe", "kernels", "roofline")
+            "dstar", "moe", "kernels", "roofline", "obs")
+
+QUICK_SCALE = 0.02
+
+
+def snapshot_path(json_dir: str, section: str) -> str:
+    return os.path.join(json_dir, f"BENCH_{section}.json")
+
+
+def write_snapshot(json_dir: str, section: str, rows, wall_s: float,
+                   scale, quick: bool) -> str:
+    """One section's rows as a JSON snapshot (sorted keys, trailing
+    newline — byte-stable for committed copies)."""
+    os.makedirs(json_dir, exist_ok=True)
+    path = snapshot_path(json_dir, section)
+    doc = {
+        "section": section,
+        "generated_by": "benchmarks.run",
+        "quick": bool(quick),
+        "scale": scale,
+        "wall_s": round(wall_s, 2),
+        "rows": [{"name": r.name, "us_per_call": round(r.us_per_call, 2),
+                  "derived": r.derived} for r in rows],
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True, default=str)
+        f.write("\n")
+    return path
 
 
 def main() -> None:
@@ -22,8 +58,19 @@ def main() -> None:
                     help=f"comma list of {SECTIONS}")
     ap.add_argument("--scale", type=float, default=None,
                     help="suite scale override (default per-section)")
+    ap.add_argument("--quick", action="store_true",
+                    help=f"smoke scale ({QUICK_SCALE}) for scale-aware "
+                         "sections; the CI/snapshot path")
+    ap.add_argument("--json", default=None, metavar="DIR",
+                    help="also write BENCH_<section>.json per section")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else set(SECTIONS)
+    unknown = only - set(SECTIONS)
+    if unknown:
+        ap.error(f"unknown sections {sorted(unknown)}; "
+                 f"choose from {SECTIONS}")
+    scale = args.scale if args.scale is not None \
+        else (QUICK_SCALE if args.quick else None)
 
     rows = []
     t0 = time.time()
@@ -32,12 +79,19 @@ def main() -> None:
         if name not in only:
             return
         t = time.time()
-        rows.extend(fn(**kw))
-        print(f"# {name}: {time.time()-t:.1f}s", file=sys.stderr)
+        out = list(fn(**kw))
+        rows.extend(out)
+        dt = time.time() - t
+        print(f"# {name}: {dt:.1f}s", file=sys.stderr)
+        if args.json:
+            path = write_snapshot(args.json, name, out, dt,
+                                  kw.get("scale"), args.quick)
+            print(f"# wrote {path}", file=sys.stderr)
 
     from . import (fig56_speedup, fig7_overhead, fig8_graph, hybrid_blocks,
-                   kernels_bench, moe_dispatch, roofline, spmm_batch, table1)
-    scale_kw = {"scale": args.scale} if args.scale else {}
+                   kernels_bench, moe_dispatch, obs_overhead, roofline,
+                   spmm_batch, table1)
+    scale_kw = {"scale": scale} if scale is not None else {}
     section("table1", table1.run, **scale_kw)
     section("fig56", fig56_speedup.run, **scale_kw)
     section("fig7", fig7_overhead.run, **scale_kw)
@@ -48,6 +102,7 @@ def main() -> None:
     section("moe", moe_dispatch.run)
     section("kernels", kernels_bench.run)
     section("roofline", roofline.run)
+    section("obs", obs_overhead.run, **scale_kw)
 
     print_rows(rows)
     print(f"# total: {time.time()-t0:.1f}s", file=sys.stderr)

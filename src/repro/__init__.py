@@ -23,15 +23,19 @@ _API_EXPORTS = (
     "TransformRecipe", "PlanFingerprint", "PlanError", "PlanSchemaError",
     "SpMVService", "TuningDB", "KernelTuner", "TileGeometry",
     "offline_phase", "MachineModel", "MatrixStats", "csr_from_dense",
-    "csr_from_rows",
+    "csr_from_rows", "obs", "Telemetry",
 )
 
 __all__ = ["__version__", "api", *_API_EXPORTS]
 
 
 def __getattr__(name: str):
+    import importlib
+    if name == "obs":
+        # resolved directly (not via repro.api) so the stdlib-only
+        # telemetry surface never drags jax into the importing process
+        return importlib.import_module("repro.obs")
     if name in _API_EXPORTS or name == "api":
-        import importlib
         api = importlib.import_module("repro.api")
         return api if name == "api" else getattr(api, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -47,7 +47,9 @@ from repro.core.plan import (SCHEMA_VERSION, BlockPlan, ExecutionPlan,
 from repro.core.policy import MemoryPolicy
 from repro.core.transform import (TRANSFORMS_HOST, csr_from_dense,
                                   csr_from_rows)
+from repro.obs import FakeClock, InMemorySink, JsonlSink, Telemetry
 from repro.serve import SpMVService
+from repro import obs
 
 __all__ = [
     # the plan API (the public face)
@@ -64,6 +66,8 @@ __all__ = [
     # formats + construction
     "CSR", "CCS", "COO", "ELL", "BCSR", "BucketedELL", "MatrixStats",
     "memory_bytes", "csr_from_dense", "csr_from_rows", "TRANSFORMS_HOST",
+    # observability (repro.obs is the full surface; these are the usuals)
+    "obs", "Telemetry", "InMemorySink", "JsonlSink", "FakeClock",
     # policy + deprecated shims
     "MemoryPolicy", "Decision", "AutoTunedSpMV",
     "decide_paper", "decide_generalized", "decide_cost_model",

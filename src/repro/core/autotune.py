@@ -38,6 +38,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+import repro.obs as _obs
+
 from .formats import CSR, MatrixStats, memory_bytes
 from .spmv import spmm, spmv
 from .transform import TRANSFORMS_HOST
@@ -259,6 +261,7 @@ def offline_phase(
             return fn
         return functools.partial(fn, tuning=rec.geometry)
 
+    tel = _obs.get()
     records: List[OfflineRecord] = []
     for name, csr in suite:
         stats = MatrixStats.of(csr)
@@ -268,31 +271,42 @@ def offline_phase(
             x = jnp.ones((csr.n_cols,), jnp.float32)
         else:
             x = jnp.ones((csr.n_cols, batch), jnp.float32)
-        csr_fn = impls.get("csr", default_op)
-        if "csr" in impls:
-            csr_fn = tuned(csr_fn, csr, stats, x)
-        jit_csr = jax.jit(lambda m, v, fn=csr_fn: fn(m, v))
-        t_crs = time_fn(jit_csr, csr, x, iters=iters)
-        rec = OfflineRecord(name=name, n=stats.n, nnz=stats.nnz, mu=stats.mu,
-                            sigma=stats.sigma, d_mat=stats.d_mat,
-                            t_crs=t_crs, batch=batch)
-        base_mem = memory_bytes(csr)
-        for f in formats:
-            trans = TRANSFORMS_HOST[f]
-            t_trans = time_host(trans, csr)
-            fmt_obj = trans(csr)
-            f_fn = impls.get(f, default_op)
-            if f in impls:
-                f_fn = tuned(f_fn, fmt_obj, stats, x)
-            jit_f = jax.jit(lambda m, v, fn=f_fn: fn(m, v))
-            t_f = time_fn(jit_f, fmt_obj, x, iters=iters)
-            sp = t_crs / t_f
-            tt = t_trans / t_crs
-            rec.formats[f] = FormatMeasurement(
-                t_spmv=t_f, t_trans=t_trans, sp=sp, tt=tt,
-                r=sp / tt if tt > 0 else float("inf"),
-                mem_ratio=memory_bytes(fmt_obj) / base_mem,
-            )
+        with tel.span("offline.matrix", matrix=name, n=stats.n,
+                      nnz=stats.nnz, d_mat=stats.d_mat, batch=batch):
+            csr_fn = impls.get("csr", default_op)
+            if "csr" in impls:
+                csr_fn = tuned(csr_fn, csr, stats, x)
+            jit_csr = jax.jit(lambda m, v, fn=csr_fn: fn(m, v))
+            t_crs = time_fn(jit_csr, csr, x, iters=iters)
+            if tel.enabled:
+                tel.histogram("offline.t_crs_s").observe(t_crs)
+            rec = OfflineRecord(name=name, n=stats.n, nnz=stats.nnz,
+                                mu=stats.mu, sigma=stats.sigma,
+                                d_mat=stats.d_mat, t_crs=t_crs, batch=batch)
+            base_mem = memory_bytes(csr)
+            for f in formats:
+                trans = TRANSFORMS_HOST[f]
+                t_trans = time_host(trans, csr)
+                fmt_obj = trans(csr)
+                f_fn = impls.get(f, default_op)
+                if f in impls:
+                    f_fn = tuned(f_fn, fmt_obj, stats, x)
+                jit_f = jax.jit(lambda m, v, fn=f_fn: fn(m, v))
+                t_f = time_fn(jit_f, fmt_obj, x, iters=iters)
+                sp = t_crs / t_f
+                tt = t_trans / t_crs
+                rec.formats[f] = FormatMeasurement(
+                    t_spmv=t_f, t_trans=t_trans, sp=sp, tt=tt,
+                    r=sp / tt if tt > 0 else float("inf"),
+                    mem_ratio=memory_bytes(fmt_obj) / base_mem,
+                )
+                if tel.enabled:
+                    tel.histogram("offline.t_trans_s", fmt=f).observe(t_trans)
+                    tel.histogram("offline.t_spmv_s", fmt=f).observe(t_f)
+                    tel.event("offline.measure", matrix=name, fmt=f,
+                              batch=batch, d_mat=stats.d_mat, t_crs=t_crs,
+                              t_f=t_f, t_trans=t_trans, sp=sp, tt=tt,
+                              r=rec.formats[f].r)
         records.append(rec)
 
     d_star = {}
@@ -317,11 +331,24 @@ class Decision:
     expected_gain: float = 0.0  # predicted fraction of time saved
 
 
+def _emit_decision(dec: Decision, **extra: Any) -> Decision:
+    """Record an on-line decision as a ``plan.decision`` event + counter —
+    every rule firing becomes a replayable point on the D_mat–R graph."""
+    tel = _obs.get()
+    if tel.enabled:
+        tel.counter("plan.decisions", rule=dec.rule, fmt=dec.fmt).inc()
+        tel.event("plan.decision", rule=dec.rule, fmt=dec.fmt,
+                  d_mat=dec.d_mat, d_star=dec.d_star,
+                  expected_gain=dec.expected_gain, **extra)
+    return dec
+
+
 def decide_paper(db: TuningDB, stats: MatrixStats, fmt: str = "ell_row") -> Decision:
     """The paper's on-line rule: transform iff D_mat < D*."""
     ds = db.d_star.get(fmt, 0.0)
     chosen = fmt if stats.d_mat < ds else "csr"
-    return Decision(fmt=chosen, d_mat=stats.d_mat, d_star=ds, rule="paper")
+    return _emit_decision(Decision(fmt=chosen, d_mat=stats.d_mat, d_star=ds,
+                                   rule="paper"))
 
 
 def decide_generalized(db: TuningDB, stats: MatrixStats,
@@ -349,9 +376,11 @@ def decide_generalized(db: TuningDB, stats: MatrixStats,
         cost = k / max(pred["sp"], 1e-9) + pred["tt"]
         if cost < best_cost:
             best_fmt, best_cost, best_ds = f, cost, db.d_star.get(f, 0.0)
-    return Decision(fmt=best_fmt, d_mat=stats.d_mat, d_star=best_ds,
-                    rule="generalized",
-                    expected_gain=1.0 - best_cost / float(k))
+    return _emit_decision(
+        Decision(fmt=best_fmt, d_mat=stats.d_mat, d_star=best_ds,
+                 rule="generalized",
+                 expected_gain=1.0 - best_cost / float(k)),
+        expected_iterations=k, batch=b)
 
 
 # ---------------------------------------------------------------------------
@@ -418,9 +447,11 @@ def decide_cost_model(model: MachineModel, stats: MatrixStats,
         cost = k * model.t_spmv(f, stats, batch=b) + model.t_trans(f, stats)
         if cost < best_cost:
             best_fmt, best_cost = f, cost
-    return Decision(fmt=best_fmt, d_mat=stats.d_mat, d_star=float("nan"),
-                    rule="cost_model",
-                    expected_gain=1.0 - best_cost / (k * t_crs))
+    return _emit_decision(
+        Decision(fmt=best_fmt, d_mat=stats.d_mat, d_star=float("nan"),
+                 rule="cost_model",
+                 expected_gain=1.0 - best_cost / (k * t_crs)),
+        expected_iterations=k, batch=b)
 
 
 # ---------------------------------------------------------------------------

@@ -30,6 +30,8 @@ from __future__ import annotations
 import importlib
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+import repro.obs as _obs
+
 OPS = ("spmv", "spmm")
 TIERS = ("reference", "kernel")
 
@@ -98,15 +100,18 @@ def resolve_impl(fmt: str, op: str = "spmv", tier: str = "reference",
     geometry) must know whether the fallback landed on the reference tier."""
     _ensure_loaded(tier)
     fn = _IMPLS.get((fmt, op, tier))
-    if fn is not None:
-        return fn, tier
-    if fallback and tier != "reference":
+    found = tier
+    if fn is None and fallback and tier != "reference":
         _ensure_loaded("reference")
         fn = _IMPLS.get((fmt, op, "reference"))
-        if fn is not None:
-            return fn, "reference"
-    raise KeyError(f"no {tier} implementation registered for "
-                   f"({fmt!r}, {op!r})")
+        found = "reference"
+    if fn is None:
+        raise KeyError(f"no {tier} implementation registered for "
+                       f"({fmt!r}, {op!r})")
+    tel = _obs.get()
+    if tel.enabled:
+        tel.counter("dispatch.resolve", fmt=fmt, op=op, tier=found).inc()
+    return fn, found
 
 
 def get_impl(fmt: str, op: str = "spmv", tier: str = "reference",

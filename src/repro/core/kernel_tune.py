@@ -35,6 +35,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+import repro.obs as _obs
+
 from . import dispatch as _dispatch
 from .formats import CCS, CSR, MatrixStats
 
@@ -398,6 +400,15 @@ class KernelTuner:
             self.records.append(rec)
         else:
             self.records[idx] = rec
+        tel = _obs.get()
+        if tel.enabled:
+            attrs = dict(fmt=rec.fmt, op=rec.op, batch=rec.batch,
+                         t_best=rec.t_best, t_default=rec.t_default,
+                         speedup=rec.speedup,
+                         geometry=rec.geometry.to_dict())
+            if rec.bucket_w is not None:
+                attrs["bucket_w"] = rec.bucket_w
+            tel.event("tune.winner", **attrs)
         return rec
 
     # -- search --------------------------------------------------------------
@@ -422,6 +433,9 @@ class KernelTuner:
         key = self._key(fmt, op, batch, profile)
         idx = self._memo.get(key)
         if not force and idx is not None:
+            tel = _obs.get()
+            if tel.enabled:
+                tel.counter("tune.memo_hit", fmt=fmt, op=op).inc()
             return self.records[idx]
 
         if impl is None:
@@ -431,8 +445,10 @@ class KernelTuner:
             x = jnp.ones(shape, jnp.float32)
 
         if fmt == "sell":
-            return self._tune_sell(obj, op, batch, impl, x, profile, key,
-                                   force)
+            with _obs.span("tune.sweep", fmt=fmt, op=op, batch=batch,
+                           d_mat=profile[2]):
+                return self._tune_sell(obj, op, batch, impl, x, profile,
+                                       key, force)
 
         cands: List[Optional[TileGeometry]] = [None]
         if fmt == "ccs":
@@ -450,17 +466,22 @@ class KernelTuner:
             grid = grid[: self.max_candidates]
         cands.extend(grid)
 
-        times: List[Tuple[float, Optional[TileGeometry]]] = []
-        for g in cands:
-            gg = g
-            if g is not None and fmt in ("csr", "ccs", "bcsr"):
-                spb = _slab_bound_for(obj, g)
-                if spb is not None:
-                    gg = replace(g, slabs_per_block=spb)
-            times.append((self._time_launch(impl, obj, x, gg), gg))
+        with _obs.span("tune.sweep", fmt=fmt, op=op, batch=batch,
+                       d_mat=profile[2]) as sweep:
+            times: List[Tuple[float, Optional[TileGeometry]]] = []
+            for g in cands:
+                gg = g
+                if g is not None and fmt in ("csr", "ccs", "bcsr"):
+                    spb = _slab_bound_for(obj, g)
+                    if spb is not None:
+                        gg = replace(g, slabs_per_block=spb)
+                times.append((self._time_launch(impl, obj, x, gg,
+                                                fmt=fmt, op=op), gg))
 
-        t_default = times[0][0]
-        t_best, best_g = min(times, key=lambda tg: tg[0])
+            t_default = times[0][0]
+            t_best, best_g = min(times, key=lambda tg: tg[0])
+            sweep.set(candidates=len(cands), t_best=t_best,
+                      t_default=t_default)
         rec = GeometryRecord(
             fmt=fmt, op=op, batch=batch, n=profile[0],
             nnz=profile[1], d_mat=profile[2], sig=profile[3],
@@ -469,11 +490,16 @@ class KernelTuner:
         return self._record(key, rec)
 
     def _time_launch(self, impl: Callable, obj: Any, x: jax.Array,
-                     g: Optional[TileGeometry]) -> float:
+                     g: Optional[TileGeometry], **span_attrs: Any) -> float:
         fn = jax.jit(lambda m, v, _f=impl, _g=g:
                      _f(m, v, interpret=self.interpret, tuning=_g))
         thunk = lambda _fn=fn: jax.block_until_ready(_fn(obj, x))
-        return float(self._timer(thunk, g))
+        with _obs.span("tune.candidate",
+                       geometry=g.to_dict() if g is not None else {},
+                       **span_attrs) as sp:
+            t = float(self._timer(thunk, g))
+            sp.set(t=t)
+        return t
 
     def _tune_sell(self, obj: Any, op: str, batch: int, impl: Callable,
                    x: jax.Array, profile: Tuple[int, int, float, int],
@@ -500,7 +526,8 @@ class KernelTuner:
                                         width=b.width, batch=batch)
             if self.max_candidates is not None:
                 grid = grid[: self.max_candidates]
-            times = [(self._time_launch(ell_impl, b, x, g), g)
+            times = [(self._time_launch(ell_impl, b, x, g, fmt="sell",
+                                        op=op, bucket_w=int(b.width)), g)
                      for g in [None] + grid]
             t_default = times[0][0]
             t_best, best_g = min(times, key=lambda tg: tg[0])
@@ -516,7 +543,8 @@ class KernelTuner:
         cands: List[Optional[TileGeometry]] = [None]
         if table:
             cands.append(TileGeometry(buckets=tuple(table)))
-        times = [(self._time_launch(impl, obj, x, g), g) for g in cands]
+        times = [(self._time_launch(impl, obj, x, g, fmt="sell", op=op), g)
+                 for g in cands]
         t_default = times[0][0]
         t_best, best_g = min(times, key=lambda tg: tg[0])
         rec = GeometryRecord(

@@ -51,6 +51,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as _obs
+
 from . import dispatch as _dispatch
 from .autotune import (MachineModel, TuningDB, decide_cost_model,
                        decide_generalized, decide_paper)
@@ -756,41 +758,56 @@ class Planner:
         stats = MatrixStats.of(csr)
         tier_used = self._resolve_tier(tier)
         rule_used = self._resolve_rule(rule)
+        tel = _obs.get()
 
-        if partition is not None:
-            return self._plan_hybrid(csr, stats, rule_used, batch, k,
-                                     tier_used, strategy=partition,
-                                     formats=formats, **partition_kw)
-        if fmt is not None:
-            chosen, rule_used = fmt, "fixed"
-            d_star, gain = float("nan"), 0.0
-        else:
-            decision = self._decide(stats, rule_used, formats, k, batch)
-            chosen = decision.fmt
-            d_star, gain = decision.d_star, decision.expected_gain
-        if chosen == "hybrid":
-            return self._plan_hybrid(csr, stats, rule_used, batch, k,
-                                     tier_used, strategy=self.strategy,
-                                     formats=formats, **partition_kw)
-        if partition_kw:
-            # build_hybrid would raise on unknown kwargs; the leaf path
-            # must not silently swallow them instead
-            raise PlanError(
-                f"unexpected arguments {sorted(partition_kw)}: partition "
-                f"options apply only to hybrid plans (pass partition=...)")
+        with tel.span("plan.plan", rule=rule_used, tier=tier_used,
+                      batch=batch, expected_iterations=k, n=stats.n,
+                      nnz=stats.nnz, d_mat=stats.d_mat) as plan_span:
+            if partition is not None:
+                plan_span.set(fmt="hybrid")
+                return self._plan_hybrid(csr, stats, rule_used, batch, k,
+                                         tier_used, strategy=partition,
+                                         formats=formats, **partition_kw)
+            if fmt is not None:
+                chosen, rule_used = fmt, "fixed"
+                d_star, gain = float("nan"), 0.0
+                if tel.enabled:
+                    # the rule paths emit inside decide_*; the forced-format
+                    # path must still land on the decision table
+                    tel.counter("plan.decisions", rule="fixed",
+                                fmt=chosen).inc()
+                    tel.event("plan.decision", rule="fixed", fmt=chosen,
+                              d_mat=stats.d_mat, d_star=d_star,
+                              expected_gain=gain)
+            else:
+                decision = self._decide(stats, rule_used, formats, k, batch)
+                chosen = decision.fmt
+                d_star, gain = decision.d_star, decision.expected_gain
+            plan_span.set(fmt=chosen)
+            if chosen == "hybrid":
+                return self._plan_hybrid(csr, stats, rule_used, batch, k,
+                                         tier_used, strategy=self.strategy,
+                                         formats=formats, **partition_kw)
+            if partition_kw:
+                # build_hybrid would raise on unknown kwargs; the leaf path
+                # must not silently swallow them instead
+                raise PlanError(
+                    f"unexpected arguments {sorted(partition_kw)}: partition "
+                    f"options apply only to hybrid plans (pass "
+                    f"partition=...)")
 
-        plan = ExecutionPlan(
-            fmt=chosen, rule=rule_used, tier=tier_used, batch=batch,
-            expected_iterations=k,
-            transform=TransformRecipe(
-                chosen, dict(DEFAULT_RECIPE_PARAMS.get(chosen, {}))),
-            fingerprint=PlanFingerprint.from_stats(stats,
-                                                   _structure_sig(csr)),
-            machine=self._machine(),
-            d_mat=stats.d_mat, d_star=d_star, expected_gain=gain)
-        if tier_used == "kernel":
-            plan.geometry = self._tune_leaf(csr, stats, plan)
-        return plan
+            plan = ExecutionPlan(
+                fmt=chosen, rule=rule_used, tier=tier_used, batch=batch,
+                expected_iterations=k,
+                transform=TransformRecipe(
+                    chosen, dict(DEFAULT_RECIPE_PARAMS.get(chosen, {}))),
+                fingerprint=PlanFingerprint.from_stats(stats,
+                                                       _structure_sig(csr)),
+                machine=self._machine(),
+                d_mat=stats.d_mat, d_star=d_star, expected_gain=gain)
+            if tier_used == "kernel":
+                plan.geometry = self._tune_leaf(csr, stats, plan)
+            return plan
 
     def build(self, csr: CSR, **plan_kw) -> PlannedMatrix:
         """``plan(csr) .bind(csr)`` in one call."""

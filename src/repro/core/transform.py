@@ -13,10 +13,13 @@ Two implementation paths:
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
+
+import repro.obs as _obs
 
 from .formats import CSR, CCS, COO, ELL, BucketedELL
 
@@ -26,6 +29,27 @@ from .formats import CSR, CCS, COO, ELL, BucketedELL
 # ---------------------------------------------------------------------------
 def pad_to_multiple(n: int, m: int) -> int:
     return ((n + m - 1) // m) * m
+
+
+def _traced(fmt: str):
+    """Wrap a host conversion in a ``transform`` span carrying the target
+    format, matrix size, and any simple keyword parameters — so t_trans
+    shows up per conversion in every trace, not just in offline records."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(m, *a, **kw):
+            tel = _obs.get()
+            if not tel.enabled:
+                return fn(m, *a, **kw)
+            attrs = {"fmt": fmt,
+                     "n_rows": int(getattr(m, "n_rows", 0) or 0),
+                     "nnz": int(getattr(m, "nnz", 0) or 0)}
+            attrs.update((k, v) for k, v in kw.items()
+                         if isinstance(v, (bool, int, float, str)))
+            with tel.span("transform", **attrs):
+                return fn(m, *a, **kw)
+        return wrapper
+    return deco
 
 
 def _pad1(x: np.ndarray, n_pad: int, fill=0) -> np.ndarray:
@@ -76,6 +100,7 @@ def csr_from_rows(row_cols: Sequence[np.ndarray], row_vals: Sequence[np.ndarray]
 # ---------------------------------------------------------------------------
 # CRS -> COO-Row (host): trivial, row ids from IRP (paper: "easy" direction)
 # ---------------------------------------------------------------------------
+@_traced("coo_row")
 def host_csr_to_coo_row(m: CSR) -> COO:
     ip = np.asarray(m.indptr)
     lens = ip[1:] - ip[:-1]
@@ -124,6 +149,7 @@ def host_csr_to_ccs_paper(m: CSR) -> CCS:
                indptr=IRP_T.astype(np.int32), shape=m.shape, nnz=nnz)
 
 
+@_traced("ccs")
 def host_csr_to_ccs(m: CSR) -> CCS:
     """Vectorized counting sort — same output order as the paper's algorithm
     (stable within a column by row index, because CSR scans rows in order)."""
@@ -144,6 +170,7 @@ def host_csr_to_ccs(m: CSR) -> CCS:
 # ---------------------------------------------------------------------------
 # CRS -> COO-Column (host): Phase II on top of CCS (paper: "easy" given CCS)
 # ---------------------------------------------------------------------------
+@_traced("coo_col")
 def host_csr_to_coo_col(m: CSR) -> COO:
     ccs = host_csr_to_ccs(m)
     ip = np.asarray(ccs.indptr)
@@ -158,6 +185,7 @@ def host_csr_to_coo_col(m: CSR) -> COO:
 # ---------------------------------------------------------------------------
 # CRS -> ELL (host)
 # ---------------------------------------------------------------------------
+@_traced("ell")
 def host_csr_to_ell(m: CSR, order: str = "row",
                     width: Optional[int] = None) -> ELL:
     ip = np.asarray(m.indptr)
@@ -186,6 +214,7 @@ def host_csr_to_ell(m: CSR, order: str = "row",
 # ---------------------------------------------------------------------------
 # CRS -> BucketedELL (beyond paper; SELL-C-sigma TPU adaptation)
 # ---------------------------------------------------------------------------
+@_traced("sell")
 def host_csr_to_sell(m: CSR, slice_rows: int = 128,
                      width_quantum: int = 8) -> BucketedELL:
     """Sort rows by length, group into slices of ``slice_rows`` rows, round
@@ -283,6 +312,7 @@ def device_csr_to_ccs(m: CSR) -> CCS:
                shape=m.shape, nnz=m.nnz)
 
 
+@_traced("hybrid")
 def _host_csr_to_hybrid(m: CSR, **kw):
     # lazy import: repro.partition imports this module at load time
     from repro.partition import host_csr_to_hybrid
@@ -313,6 +343,7 @@ __all__ = [
 # ---------------------------------------------------------------------------
 # CRS -> BCSR (paper's named future work; see formats.BCSR)
 # ---------------------------------------------------------------------------
+@_traced("bcsr")
 def host_csr_to_bcsr(m: CSR, block: int = 8) -> "BCSR":
     """Group nonzeros into b x b dense blocks (CSR order over block rows)."""
     from .formats import BCSR

@@ -44,6 +44,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+import repro.obs as _obs
 from repro.core import dispatch as _dispatch
 from repro.core.autotune import MachineModel, TuningDB, time_fn
 from repro.core.formats import CSR, memory_bytes
@@ -116,6 +117,9 @@ class SpMVService:
     max_batch: int = 32         # micro-batch flush threshold / panel width
     pad_batches: bool = True    # zero-pad panels to max_batch (one compile)
     deadline_ms: Optional[float] = None  # flush when oldest pending exceeds
+    # every timestamp the service takes (deadline ages, serve timings) comes
+    # from this clock, so deadline tests run on a FakeClock with no sleeps
+    clock: Callable[[], float] = time.perf_counter
     entries: Dict[str, MatrixEntry] = field(default_factory=dict)
 
     # -- launch-geometry tuning at registration ------------------------------
@@ -205,24 +209,34 @@ class SpMVService:
         builds = prior.builds + 1 if prior is not None else 1
         plan_matched = (plan is not None and plan.fingerprint is not None
                         and plan.fingerprint.matches(csr))
-        t0 = time.perf_counter()
-        if plan_matched:
-            hyb, report = plan.materialize(csr)
-            impls, spmm_impls, tunings = self._plan_impls(hyb, plan)
-            entry_plan = plan
-        else:
-            hyb, report = build_hybrid(
-                csr, strategy=self.strategy, db=self.db, model=self.model,
-                policy=self.policy, expected_iterations=expected_iterations,
-                batch=batch, **build_kw)
-            impls, spmm_impls, tunings = self._tuned_impls(hyb)
-            entry_plan = self._derive_plan(csr, hyb, report, tunings,
-                                           expected_iterations, batch,
-                                           build_kw)
-        fn = jax.jit(lambda m, x: spmv_hybrid(m, x, impls=impls))
-        spmm_fn = jax.jit(
-            lambda m, x: spmm_hybrid(m, x, impls=spmm_impls))
-        t_build = time.perf_counter() - t0
+        tel = _obs.get()
+        if tel.enabled and plan is not None:
+            tel.counter("service.plan_replay", key=key,
+                        hit=plan_matched).inc()
+            tel.event("service.plan_replay", key=key, hit=plan_matched)
+        t0 = self.clock()
+        with tel.span("service.register", key=key, n=csr.n_rows,
+                      nnz=csr.nnz, batch=batch,
+                      plan_matched=plan_matched) as reg_span:
+            if plan_matched:
+                hyb, report = plan.materialize(csr)
+                impls, spmm_impls, tunings = self._plan_impls(hyb, plan)
+                entry_plan = plan
+            else:
+                hyb, report = build_hybrid(
+                    csr, strategy=self.strategy, db=self.db,
+                    model=self.model, policy=self.policy,
+                    expected_iterations=expected_iterations,
+                    batch=batch, **build_kw)
+                impls, spmm_impls, tunings = self._tuned_impls(hyb)
+                entry_plan = self._derive_plan(csr, hyb, report, tunings,
+                                               expected_iterations, batch,
+                                               build_kw)
+            fn = jax.jit(lambda m, x: spmv_hybrid(m, x, impls=impls))
+            spmm_fn = jax.jit(
+                lambda m, x: spmm_hybrid(m, x, impls=spmm_impls))
+            t_build = self.clock() - t0
+            reg_span.set(t_build=t_build, n_blocks=hyb.n_blocks)
         t_csr = t_hyb = 0.0
         if measure_baseline:
             x0 = jnp.ones((csr.n_cols,), jnp.float32)
@@ -238,7 +252,7 @@ class SpMVService:
             # the old operator was valid to the end: serve its queued
             # vectors before releasing it rather than failing their futures
             try:
-                self._flush_entry(prior)
+                self._flush_entry(prior, key=key, cause="reregister")
             except Exception:
                 pass  # the panel's futures already carry the exception
             self._release(key, prior)
@@ -282,12 +296,16 @@ class SpMVService:
     # -- direct paths --------------------------------------------------------
     def spmv(self, key: str, x: jax.Array) -> jax.Array:
         entry = self.entries[key]
-        t0 = time.perf_counter()
+        t0 = self.clock()
         y = jax.block_until_ready(entry.fn(entry.matrix, jnp.asarray(x)))
-        dt = time.perf_counter() - t0
+        dt = self.clock() - t0
         with entry.lock:
             entry.n_calls += 1
             entry.t_serve += dt
+        tel = _obs.get()
+        if tel.enabled:
+            tel.histogram("service.query_latency_s", key=key,
+                          op="spmv").observe(dt)
         return y
 
     def spmm(self, key: str, x: jax.Array) -> jax.Array:
@@ -296,13 +314,17 @@ class SpMVService:
         x = jnp.asarray(x)
         if x.ndim != 2:
             raise ValueError(f"spmm expects (n_cols, B); got {x.shape}")
-        t0 = time.perf_counter()
+        t0 = self.clock()
         y = jax.block_until_ready(entry.spmm_fn(entry.matrix, x))
-        dt = time.perf_counter() - t0
+        dt = self.clock() - t0
         with entry.lock:
             entry.n_spmm_calls += 1
             entry.n_spmm_cols += int(x.shape[1])
             entry.t_serve += dt
+        tel = _obs.get()
+        if tel.enabled:
+            tel.histogram("service.query_latency_s", key=key,
+                          op="spmm").observe(dt)
         return y
 
     # -- micro-batching queue ------------------------------------------------
@@ -317,18 +339,23 @@ class SpMVService:
             raise ValueError(f"expected x of shape ({entry.matrix.n_cols},); "
                              f"got {x.shape}")
         fut: Future = Future()
-        now = time.perf_counter()
+        now = self.clock()
         with entry.lock:
             if entry.dead:
                 # racing evict/re-register: never enqueue onto a released
                 # entry — nothing would ever flush it
                 raise KeyError(f"matrix {key!r} was evicted")
             entry.pending.append((fut, x, now))
-            full = len(entry.pending) >= self.max_batch
+            depth = len(entry.pending)
+            full = depth >= self.max_batch
             overdue = (self.deadline_ms is not None and
                        (now - entry.pending[0][2]) * 1e3 >= self.deadline_ms)
+        tel = _obs.get()
+        if tel.enabled:
+            tel.gauge("service.queue_depth", key=key).set(depth)
         if full or overdue:
-            self._flush_entry(entry)
+            self._flush_entry(entry, key=key,
+                              cause="max_batch" if full else "deadline")
         return fut
 
     def poll(self) -> int:
@@ -337,7 +364,7 @@ class SpMVService:
         number of vectors served (0 when no deadline is configured)."""
         if self.deadline_ms is None:
             return 0
-        now = time.perf_counter()
+        now = self.clock()
         served = 0
         for k in list(self.entries):
             e = self.entries.get(k)
@@ -347,7 +374,7 @@ class SpMVService:
                 due = bool(e.pending) and \
                     (now - e.pending[0][2]) * 1e3 >= self.deadline_ms
             if due:
-                served += self._flush_entry(e)
+                served += self._flush_entry(e, key=k, cause="deadline")
         return served
 
     def flush(self, key: Optional[str] = None) -> int:
@@ -355,14 +382,14 @@ class SpMVService:
         SpMM per matrix.  Returns the number of vectors served — the last
         micro-batch may be ragged (fewer than ``max_batch`` columns)."""
         if key is not None:
-            entries = [self.entries[key]]
+            entries = [(key, self.entries[key])]
         else:  # tolerate evictions racing the snapshot
-            entries = [e for k in list(self.entries)
+            entries = [(k, e) for k in list(self.entries)
                        if (e := self.entries.get(k)) is not None]
         served, first_err = 0, None
-        for e in entries:
+        for k, e in entries:
             try:
-                served += self._flush_entry(e)
+                served += self._flush_entry(e, key=k, cause="explicit")
             except Exception as err:
                 # that panel's futures already carry the exception; keep
                 # serving the other matrices and re-raise at the end
@@ -375,24 +402,33 @@ class SpMVService:
     def pending_count(self, key: str) -> int:
         return len(self.entries[key].pending)
 
-    def _flush_entry(self, entry: MatrixEntry) -> int:
+    def _flush_entry(self, entry: MatrixEntry, key: str = "",
+                     cause: str = "explicit") -> int:
         with entry.lock:
             batch, entry.pending = entry.pending, []
         if not batch:
             return 0
         b = len(batch)
-        try:
-            X = jnp.stack([x for _, x, _ in batch], axis=1)   # (n_cols, b)
-            if self.pad_batches and b < self.max_batch:
-                X = jnp.pad(X, ((0, 0), (0, self.max_batch - b)))
-            t0 = time.perf_counter()
-            Y = jax.block_until_ready(entry.spmm_fn(entry.matrix, X))
-        except Exception as e:
-            # never strand a future: the whole panel fails together
-            for fut, _, _ in batch:
-                fut.set_exception(e)
-            raise
-        dt = time.perf_counter() - t0
+        tel = _obs.get()
+        with tel.span("service.flush", key=key, cause=cause, batch=b):
+            try:
+                X = jnp.stack([x for _, x, _ in batch], axis=1)  # (n_cols, b)
+                if self.pad_batches and b < self.max_batch:
+                    X = jnp.pad(X, ((0, 0), (0, self.max_batch - b)))
+                t0 = self.clock()
+                Y = jax.block_until_ready(entry.spmm_fn(entry.matrix, X))
+            except Exception as e:
+                # never strand a future: the whole panel fails together
+                for fut, _, _ in batch:
+                    fut.set_exception(e)
+                raise
+            dt = self.clock() - t0
+        if tel.enabled:
+            tel.counter("service.flush", key=key, cause=cause).inc()
+            tel.gauge("service.queue_depth", key=key).set(0)
+            tel.histogram("service.flush_latency_s", key=key).observe(dt)
+            tel.event("service.flush", key=key, cause=cause, batch=b,
+                      t_spmm=dt)
         with entry.lock:
             entry.n_spmm_calls += 1
             entry.n_spmm_cols += b
@@ -423,11 +459,29 @@ class SpMVService:
         # if a caller keeps the MatrixEntry alive
         entry.fn = entry.spmm_fn = _evicted
 
+    def _entry_telemetry(self, key: str) -> Dict[str, Any]:
+        """This key's slice of the process telemetry (query-latency
+        summaries, flush-cause counts, queue depth, plan-replay hits);
+        empty when telemetry is disabled."""
+        tel = _obs.get()
+        if not tel.enabled:
+            return {}
+        out: Dict[str, Any] = {}
+        for kind, name, labels, m in tel.metrics():
+            if labels.get("key") != key:
+                continue
+            rest = {k: v for k, v in labels.items() if k != "key"}
+            mkey = _obs.format_metric(name, rest)
+            out[mkey] = m.summary() if kind == "histogram" else m.value
+        return out
+
     def stats(self) -> Dict[str, Dict[str, Any]]:
         """Per-matrix observability: block formats, build/serve time,
         compile counts, micro-batch throughput, and amortization — the
         paper's k*B*(t_crs - t_f) > t_trans with k*B the products served so
-        far (None when the baseline was not measured)."""
+        far (None when the baseline was not measured).  With telemetry
+        enabled each entry also carries its ``"telemetry"`` slice —
+        latency-histogram summaries, flush-cause counters, queue depth."""
         out = {}
         for key, e in self.entries.items():
             products = e.n_calls + e.n_spmm_cols
@@ -456,6 +510,7 @@ class SpMVService:
                 "t_serve_s": e.t_serve,
                 "amortized": (None if saved is None
                               else saved >= e.t_build),
+                "telemetry": self._entry_telemetry(key),
             }
         return out
 

@@ -2,8 +2,6 @@
 registry, per-format SpMM parity against the dense oracle, the SELL
 empty-bucket regression, the batch-aware auto-tuner, and the micro-batched
 serving queue."""
-import time
-
 import numpy as np
 import pytest
 import jax.numpy as jnp
@@ -320,31 +318,35 @@ def test_service_evict_releases_and_reregister_counts(rng):
 
 
 def test_service_deadline_flush_and_poll(rng):
+    from repro.obs import FakeClock
+
     dense = random_dense(rng, 40, 30, 0.2)
     m = csr_from_dense(dense, pad=8)
-    svc = SpMVService(max_batch=64, deadline_ms=1.0)
+    # deadline ages are read off the service's injected clock, so the whole
+    # policy is tested deterministically — no sleeps, no scheduler jitter
+    clk = FakeClock()
+    svc = SpMVService(max_batch=64, deadline_ms=1.0, clock=clk)
     svc.register("m", m, measure_baseline=False)
     x = np.arange(30, dtype=np.float32)
     f1 = svc.submit("m", jnp.asarray(x))
     assert not f1.done()                      # queue far below max_batch
-    time.sleep(0.005)
+    clk.advance(0.005)                        # 5 ms > the 1 ms deadline
     # the next submit sees the oldest future past its deadline and flushes
     f2 = svc.submit("m", jnp.asarray(x))
     assert f1.done() and f2.done()
     np.testing.assert_allclose(np.asarray(f1.result(timeout=0)), dense @ x,
                                rtol=1e-4, atol=1e-4)
-    # poll() sweeps overdue queues without new traffic; use a deadline far
-    # above scheduler jitter for the not-yet-overdue direction
-    svc.deadline_ms = 60_000.0
+    # poll() sweeps overdue queues without new traffic
     f3 = svc.submit("m", jnp.asarray(x))
     assert svc.poll() == 0                    # not yet overdue
-    svc.deadline_ms = 0.0                     # everything pending is overdue
+    clk.advance(0.0015)                       # now past the deadline
     assert svc.poll() == 1 and f3.done()
     # no deadline configured -> poll is a no-op and nothing auto-flushes
-    svc2 = SpMVService(max_batch=64)
+    clk2 = FakeClock()
+    svc2 = SpMVService(max_batch=64, clock=clk2)
     svc2.register("m", m, measure_baseline=False)
     f4 = svc2.submit("m", jnp.asarray(x))
-    time.sleep(0.005)
+    clk2.advance(0.005)
     svc2.submit("m", jnp.asarray(x))
     assert svc2.poll() == 0 and not f4.done()
     assert svc2.flush("m") == 2

@@ -22,7 +22,7 @@ from .common import print_rows
 
 
 SECTIONS = ("table1", "fig56", "fig7", "fig8", "hybrid", "spmm_batch",
-            "dstar", "moe", "kernels", "roofline", "obs")
+            "dstar", "moe", "kernels", "roofline", "obs", "sharded")
 
 QUICK_SCALE = 0.02
 
@@ -90,7 +90,7 @@ def main() -> None:
 
     from . import (fig56_speedup, fig7_overhead, fig8_graph, hybrid_blocks,
                    kernels_bench, moe_dispatch, obs_overhead, roofline,
-                   spmm_batch, table1)
+                   sharded_spmv, spmm_batch, table1)
     scale_kw = {"scale": scale} if scale is not None else {}
     section("table1", table1.run, **scale_kw)
     section("fig56", fig56_speedup.run, **scale_kw)
@@ -103,6 +103,9 @@ def main() -> None:
     section("kernels", kernels_bench.run)
     section("roofline", roofline.run)
     section("obs", obs_overhead.run, **scale_kw)
+    # runs in a subprocess under 8 forced host devices (the parent's jax
+    # has already locked its device count)
+    section("sharded", sharded_spmv.run, **scale_kw)
 
     print_rows(rows)
     print(f"# total: {time.time()-t0:.1f}s", file=sys.stderr)

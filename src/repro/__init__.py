@@ -20,6 +20,7 @@ __version__ = "0.1.0"
 # lazily re-exported from repro.api (keeps `import repro` free of jax)
 _API_EXPORTS = (
     "Planner", "ExecutionPlan", "PlannedMatrix", "BlockPlan",
+    "ShardedPlan", "ShardedPlannedMatrix", "build_sharded",
     "TransformRecipe", "PlanFingerprint", "PlanError", "PlanSchemaError",
     "SpMVService", "TuningDB", "KernelTuner", "TileGeometry",
     "offline_phase", "MachineModel", "MatrixStats", "csr_from_dense",

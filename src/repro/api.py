@@ -40,15 +40,17 @@ from repro.core.formats import (BCSR, BucketedELL, CCS, COO, CSR, ELL,
 from repro.core.kernel_tune import (GeometryRecord, KernelTuner,
                                     TileGeometry, candidate_geometries,
                                     nearest_geometry)
-from repro.core.plan import (SCHEMA_VERSION, BlockPlan, ExecutionPlan,
-                             PlanError, PlanFingerprint, PlanSchemaError,
-                             PlannedMatrix, Planner, TransformRecipe,
+from repro.core.plan import (SCHEMA_VERSION, SHARDED_SCHEMA_VERSION,
+                             BlockPlan, ExecutionPlan, PlanError,
+                             PlanFingerprint, PlanSchemaError, PlannedMatrix,
+                             Planner, ShardedPlan, TransformRecipe,
                              apply_transform)
 from repro.core.policy import MemoryPolicy
 from repro.core.transform import (TRANSFORMS_HOST, csr_from_dense,
                                   csr_from_rows)
 from repro.obs import FakeClock, InMemorySink, JsonlSink, Telemetry
 from repro.serve import SpMVService
+from repro.sharding import ShardedPlannedMatrix, build_sharded, shard_csr
 from repro import obs
 
 __all__ = [
@@ -56,6 +58,9 @@ __all__ = [
     "SCHEMA_VERSION", "ExecutionPlan", "PlannedMatrix", "Planner",
     "BlockPlan", "TransformRecipe", "PlanFingerprint", "PlanError",
     "PlanSchemaError", "apply_transform",
+    # multi-device sharding (docs/sharding.md)
+    "SHARDED_SCHEMA_VERSION", "ShardedPlan", "ShardedPlannedMatrix",
+    "build_sharded", "shard_csr",
     # offline phase + persistence
     "offline_phase", "TuningDB", "OfflineRecord", "MachineModel",
     # kernel launch-geometry tuning

@@ -114,6 +114,30 @@ def take_rows_csr(m: CSR, rows: np.ndarray, pad: int = 8) -> CSR:
                shape=(len(rows), m.n_cols), nnz=nnz)
 
 
+def slice_csr_cols(m: CSR, c0: int, c1: int, pad: int = 8) -> CSR:
+    """Column slab [c0, c1): keep entries whose column falls in the slab,
+    rebased to column 0 — the column-sharding analogue of ``slice_csr``.
+    Full row space (every shard of a column-sharded matrix owns all rows
+    and contributes a partial y that is psum-reduced)."""
+    ip = np.asarray(m.indptr)
+    data = np.asarray(m.data)[:m.nnz]
+    cols = np.asarray(m.cols)[:m.nnz]
+    lens = (ip[1:] - ip[:-1]).astype(np.int64)
+    rows = np.repeat(np.arange(m.n_rows, dtype=np.int64), lens)
+    sel = (cols >= c0) & (cols < c1)
+    d, c, r = data[sel], cols[sel] - c0, rows[sel]  # stays row-major sorted
+    nnz = int(d.size)
+    new_lens = np.bincount(r, minlength=m.n_rows)
+    indptr = np.zeros(m.n_rows + 1, dtype=np.int32)
+    np.cumsum(new_lens, out=indptr[1:])
+    nnz_pad = max(pad_to_multiple(nnz, pad), pad)
+    dd = np.zeros(nnz_pad, dtype=data.dtype)
+    cc = np.zeros(nnz_pad, dtype=np.int32)
+    dd[:nnz], cc[:nnz] = d, c
+    return CSR(data=dd, cols=cc, indptr=indptr,
+               shape=(m.n_rows, c1 - c0), nnz=nnz)
+
+
 def slice_csr(m: CSR, r0: int, r1: int, pad: int = 8) -> CSR:
     """Contiguous row slice [r0, r1) — O(block nnz) views + one copy."""
     ip = np.asarray(m.indptr)
@@ -336,6 +360,6 @@ _dispatch.register_impl("hybrid", "spmm", spmm_hybrid)
 
 
 __all__ = ["BLOCK_FORMATS", "HybridMatrix", "BlockDecision", "HybridReport",
-           "take_rows_csr", "slice_csr", "choose_block_format",
-           "build_hybrid", "host_csr_to_hybrid", "spmv_hybrid",
-           "spmm_hybrid"]
+           "take_rows_csr", "slice_csr", "slice_csr_cols",
+           "choose_block_format", "build_hybrid", "host_csr_to_hybrid",
+           "spmv_hybrid", "spmm_hybrid"]

@@ -138,5 +138,78 @@ PARTITIONERS: Dict[str, Callable[..., np.ndarray]] = {
     "variance": partition_variance,
 }
 
+
+# ---------------------------------------------------------------------------
+# device-count granularity (the sharding tier's view of the strategies)
+# ---------------------------------------------------------------------------
+def _split_heaviest(boundaries: np.ndarray, lens: np.ndarray) -> np.ndarray:
+    """Add one cut: bisect the slab with the most nnz at its nnz midpoint
+    (falling back to the row midpoint for empty slabs)."""
+    csum = np.concatenate([[0], np.cumsum(lens)])
+    slab_nnz = csum[boundaries[1:]] - csum[boundaries[:-1]]
+    slab_rows = np.diff(boundaries)
+    # only slabs with >= 2 rows can be split again
+    candidates = np.where(slab_rows >= 2, slab_nnz, -1)
+    i = int(np.argmax(candidates))
+    if candidates[i] < 0:
+        raise ValueError("cannot split further: every slab has one row")
+    s, e = int(boundaries[i]), int(boundaries[i + 1])
+    target = (csum[s] + csum[e]) / 2.0
+    cut = int(np.searchsorted(csum[s:e], target, side="left")) + s
+    cut = int(np.clip(cut, s + 1, e - 1))
+    return np.insert(boundaries, i + 1, cut)
+
+
+def partition_for_devices(row_lens, n_devices: int,
+                          strategy: str = "balanced_nnz",
+                          **strategy_kw) -> np.ndarray:
+    """Exactly ``n_devices`` slabs — the strategies lifted to device-count
+    granularity for the sharding tier.
+
+    The block partitioners are free to emit however many blocks the data
+    suggests; a device mesh needs *exactly one slab per device*.  The
+    named strategy proposes boundaries (fixed/balanced_nnz are asked for
+    ``n_devices`` blocks directly; variance keeps its own knobs capped at
+    ``n_devices``), then the result is refined to the exact count:
+    too few -> bisect the heaviest slab at its nnz midpoint; too many ->
+    merge the lightest adjacent pair.  Unlike ``build_hybrid`` the row
+    space is *never* sorted here — device slabs must stay contiguous in
+    the original row order so shard outputs reassemble by concatenation
+    alone (no scatter collective)."""
+    lens = _as_lens(row_lens)
+    n = lens.shape[0]
+    n_devices = int(n_devices)
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    if n_devices > n:
+        raise ValueError(f"cannot cut {n} rows into {n_devices} device "
+                         f"slabs (need >= 1 row per device)")
+    if strategy == "fixed":
+        # equal row counts, ignoring block_rows: the device analogue
+        b = np.round(np.linspace(0, n, n_devices + 1)).astype(np.int64)
+    elif strategy == "balanced_nnz":
+        b = partition_balanced_nnz(lens, n_blocks=n_devices)
+    elif strategy == "variance":
+        kw = dict(strategy_kw)
+        kw.setdefault("min_rows", max(1, n // (4 * n_devices)))
+        kw["max_blocks"] = n_devices
+        b = partition_variance(lens, **kw)
+    elif strategy in PARTITIONERS:
+        b = PARTITIONERS[strategy](lens, **strategy_kw)
+    else:
+        raise KeyError(f"unknown strategy {strategy!r}; "
+                       f"one of {sorted(PARTITIONERS)}")
+    b = np.unique(np.clip(np.asarray(b, dtype=np.int64), 0, n))
+    while b.shape[0] - 1 < n_devices:
+        b = _split_heaviest(b, lens)
+    while b.shape[0] - 1 > n_devices:
+        # merge the adjacent pair with the least combined nnz
+        csum = np.concatenate([[0], np.cumsum(lens)])
+        slab_nnz = csum[b[1:]] - csum[b[:-1]]
+        i = int(np.argmin(slab_nnz[:-1] + slab_nnz[1:]))
+        b = np.delete(b, i + 1)
+    return _validate(b, n)
+
+
 __all__ = ["partition_fixed", "partition_balanced_nnz", "partition_variance",
-           "PARTITIONERS"]
+           "partition_for_devices", "PARTITIONERS"]

@@ -50,7 +50,7 @@ from repro.core.autotune import MachineModel, TuningDB, time_fn
 from repro.core.formats import CSR, memory_bytes
 from repro.core.kernel_tune import KernelTuner, TileGeometry
 from repro.core.plan import (BlockPlan, ExecutionPlan, PlanFingerprint,
-                             TransformRecipe, bind_tunings,
+                             ShardedPlan, TransformRecipe, bind_tunings,
                              blocks_by_format, rederive_slab_bounds)
 from repro.core.spmv import spmv as spmv_ref
 from repro.core.policy import MemoryPolicy
@@ -80,8 +80,10 @@ class MatrixEntry:
     n_spmm_cols: int = 0        # total RHS columns served through spmm
     builds: int = 1             # times this key's operator was (re)built
     tunings: Dict[str, Dict[str, TileGeometry]] = field(default_factory=dict)
-    plan: Optional[ExecutionPlan] = None  # the plan this entry serves
+    plan: Optional[Any] = None  # ExecutionPlan | ShardedPlan this entry serves
     from_plan: bool = False     # registration replayed a supplied plan
+    max_batch: Optional[int] = None  # per-key panel width (plan-seeded);
+    #                                  None falls through to the service's
     # pending entries are (future, vector, enqueue time) — the timestamp
     # drives the deadline flush policy
     pending: List[Tuple[Future, jax.Array, float]] = field(
@@ -121,6 +123,14 @@ class SpMVService:
     # from this clock, so deadline tests run on a FakeClock with no sleeps
     clock: Callable[[], float] = time.perf_counter
     entries: Dict[str, MatrixEntry] = field(default_factory=dict)
+    # fingerprint-keyed plan cache: registering a matrix whose structure
+    # matches an evicted/previous registration replays the cached plan
+    # instead of re-tuning (survives evict — it lives on the service)
+    plan_cache_max: int = 32
+    _plan_cache: Dict[Tuple, ExecutionPlan] = field(default_factory=dict,
+                                                    repr=False)
+    _plan_cache_hits: int = 0
+    _plan_cache_misses: int = 0
 
     # -- launch-geometry tuning at registration ------------------------------
     def _impl_bases(self) -> Dict[str, Dict[str, Callable]]:
@@ -201,15 +211,47 @@ class SpMVService:
         tuner's search.  A mismatched plan falls back to a full build (and
         re-tune); either way the entry's ``plan`` attribute carries the
         plan this key is serving, so ``register`` without a plan is also
-        how plans are *minted* (``svc.register(...).plan.save(path)``)."""
+        how plans are *minted* (``svc.register(...).plan.save(path)``).
+
+        A :class:`~repro.core.plan.ShardedPlan` routes to the multi-device
+        tier: the entry serves through a bound
+        :class:`~repro.sharding.spmv.ShardedPlannedMatrix` (extra
+        ``build_kw`` — ``mode``, ``devices``, ``mesh`` — reach its bind).
+
+        Plans carrying ``batch > 1`` seed this key's micro-batch panel
+        width (``entry.max_batch``) instead of the service default.
+
+        Without a supplied plan, a fingerprint-keyed plan cache is
+        consulted first: re-registering a matrix whose structure matches
+        a previous registration (same key or not, even after ``evict``)
+        replays the cached plan with zero re-tuning; hits/misses land in
+        ``stats()['plan_cache']``."""
+        if isinstance(plan, ShardedPlan):
+            return self._register_sharded(
+                key, csr, plan, expected_iterations=expected_iterations,
+                measure_baseline=measure_baseline, batch=batch, **build_kw)
         # keep the prior operator serving until the replacement is ready —
         # it is popped and released only at the swap below, so concurrent
         # spmv/spmm/submit against this key never see a registration gap
         prior = self.entries.get(key)
         builds = prior.builds + 1 if prior is not None else 1
+        tel = _obs.get()
+        cache_key = None
+        if plan is None:
+            cache_key = self._plan_cache_key(csr, expected_iterations,
+                                             batch, build_kw)
+            cached = self._plan_cache.get(cache_key)
+            hit = (cached is not None and cached.fingerprint is not None
+                   and cached.fingerprint.matches(csr))
+            if hit:
+                plan = cached
+                self._plan_cache_hits += 1
+            else:
+                self._plan_cache_misses += 1
+            if tel.enabled:
+                tel.counter("service.plan_cache", key=key, hit=hit).inc()
         plan_matched = (plan is not None and plan.fingerprint is not None
                         and plan.fingerprint.matches(csr))
-        tel = _obs.get()
         if tel.enabled and plan is not None:
             tel.counter("service.plan_replay", key=key,
                         hit=plan_matched).inc()
@@ -246,7 +288,14 @@ class SpMVService:
         entry = MatrixEntry(matrix=hyb, report=report, fn=fn,
                             spmm_fn=spmm_fn, t_build=t_build, t_csr=t_csr,
                             t_hybrid=t_hyb, builds=builds, tunings=tunings,
-                            plan=entry_plan, from_plan=plan_matched)
+                            plan=entry_plan, from_plan=plan_matched,
+                            max_batch=(plan.batch if plan is not None
+                                       and plan.batch > 1 else None))
+        if cache_key is not None and entry_plan is not None \
+                and not plan_matched:
+            self._plan_cache[cache_key] = entry_plan
+            while len(self._plan_cache) > self.plan_cache_max:
+                self._plan_cache.pop(next(iter(self._plan_cache)))
         self.entries[key] = entry
         if prior is not None:
             # the old operator was valid to the end: serve its queued
@@ -292,6 +341,66 @@ class SpMVService:
             fingerprint=fp,
             machine=self.db.machine if self.db is not None else "cost_model",
             d_mat=fp.d_mat, d_star=float("nan"), blocks=blocks)
+
+    # -- plan cache / sharded registration -----------------------------------
+    def _plan_cache_key(self, csr: CSR, expected_iterations: int,
+                        batch: int, build_kw: Dict[str, Any]) -> Tuple:
+        """Structure + registration knobs: a cached plan only replays for
+        a matrix with identical structure registered the same way."""
+        fp = PlanFingerprint.of(csr)
+        return (fp.n, fp.nnz, fp.sig, int(batch), int(expected_iterations),
+                self.strategy,
+                tuple(sorted((k, repr(v)) for k, v in build_kw.items())))
+
+    def _register_sharded(self, key: str, csr: CSR, plan: ShardedPlan,
+                          expected_iterations: int = 100,
+                          measure_baseline: bool = True, batch: int = 1,
+                          **bind_kw) -> MatrixEntry:
+        """The multi-device registration path: bind the ShardedPlan (per
+        its recorded partition recipe and per-shard plans) and serve the
+        key through the resulting ShardedPlannedMatrix."""
+        prior = self.entries.get(key)
+        builds = prior.builds + 1 if prior is not None else 1
+        matched = plan.matches(csr)
+        tel = _obs.get()
+        if tel.enabled:
+            tel.counter("service.plan_replay", key=key, hit=matched).inc()
+            tel.event("service.plan_replay", key=key, hit=matched,
+                      sharded=True)
+        t0 = self.clock()
+        with tel.span("service.register", key=key, n=csr.n_rows,
+                      nnz=csr.nnz, batch=batch, plan_matched=matched,
+                      sharded=True) as reg_span:
+            spm = plan.bind(csr, db=self.db, **bind_kw)
+
+            def fn(m, x):
+                return m.spmv(x)
+
+            def spmm_fn(m, x):
+                return m.spmm(x)
+
+            t_build = self.clock() - t0
+            reg_span.set(t_build=t_build, n_blocks=spm.n_shards,
+                         mode=spm.mode)
+        t_csr = t_hyb = 0.0
+        if measure_baseline:
+            x0 = jnp.ones((csr.n_cols,), jnp.float32)
+            t_csr = time_fn(jax.jit(spmv_ref), csr, x0, iters=1, warmup=1)
+            t_hyb = time_fn(fn, spm, x0, iters=1, warmup=1)
+        entry = MatrixEntry(matrix=spm, report=_ShardedReport(spm), fn=fn,
+                            spmm_fn=spmm_fn, t_build=t_build, t_csr=t_csr,
+                            t_hybrid=t_hyb, builds=builds, tunings={},
+                            plan=plan, from_plan=matched,
+                            max_batch=plan.batch if plan.batch > 1
+                            else None)
+        self.entries[key] = entry
+        if prior is not None:
+            try:
+                self._flush_entry(prior, key=key, cause="reregister")
+            except Exception:
+                pass
+            self._release(key, prior)
+        return entry
 
     # -- direct paths --------------------------------------------------------
     def spmv(self, key: str, x: jax.Array) -> jax.Array:
@@ -347,7 +456,7 @@ class SpMVService:
                 raise KeyError(f"matrix {key!r} was evicted")
             entry.pending.append((fut, x, now))
             depth = len(entry.pending)
-            full = depth >= self.max_batch
+            full = depth >= (entry.max_batch or self.max_batch)
             overdue = (self.deadline_ms is not None and
                        (now - entry.pending[0][2]) * 1e3 >= self.deadline_ms)
         tel = _obs.get()
@@ -413,8 +522,9 @@ class SpMVService:
         with tel.span("service.flush", key=key, cause=cause, batch=b):
             try:
                 X = jnp.stack([x for _, x, _ in batch], axis=1)  # (n_cols, b)
-                if self.pad_batches and b < self.max_batch:
-                    X = jnp.pad(X, ((0, 0), (0, self.max_batch - b)))
+                panel = entry.max_batch or self.max_batch
+                if self.pad_batches and b < panel:
+                    X = jnp.pad(X, ((0, 0), (0, panel - b)))
                 t0 = self.clock()
                 Y = jax.block_until_ready(entry.spmm_fn(entry.matrix, X))
             except Exception as e:
@@ -487,10 +597,12 @@ class SpMVService:
             products = e.n_calls + e.n_spmm_cols
             saved = (products * (e.t_csr - e.t_hybrid)
                      if e.t_csr > 0 else None)
+            nb = getattr(e.matrix, "nbytes", None)
             out[key] = {
                 "n_blocks": e.matrix.n_blocks,
                 "formats": e.formats(),
-                "bytes": memory_bytes(e.matrix),
+                "bytes": int(nb()) if callable(nb) else memory_bytes(
+                    e.matrix),
                 "t_build_s": e.t_build,
                 "n_calls": e.n_calls,
                 "n_spmm_calls": e.n_spmm_calls,
@@ -501,8 +613,14 @@ class SpMVService:
                 "tuned": {op: {f: g.to_dict() for f, g in per.items()}
                           for op, per in e.tunings.items() if per},
                 "plan": (None if e.plan is None else {
-                    "rule": e.plan.rule, "tier": e.plan.tier,
-                    "machine": e.plan.machine,
+                    # ShardedPlan carries axis/strategy instead of
+                    # rule/tier/machine — surface whichever it has
+                    "rule": getattr(e.plan, "rule", None),
+                    "tier": getattr(e.plan, "tier", None),
+                    "machine": getattr(e.plan, "machine", None),
+                    "axis": getattr(e.plan, "axis", None),
+                    "strategy": getattr(e.plan, "strategy", None),
+                    "n_shards": getattr(e.plan, "n_shards", None),
                     "schema_version": e.plan.schema_version,
                     "batch": e.plan.batch,
                     "from_plan": e.from_plan,   # registration replayed one
@@ -512,7 +630,27 @@ class SpMVService:
                               else saved >= e.t_build),
                 "telemetry": self._entry_telemetry(key),
             }
+        # reserved key (no matrix may register under it): the service-wide
+        # plan-cache health — consumers index stats() by matrix key
+        out["plan_cache"] = {"size": len(self._plan_cache),
+                             "hits": self._plan_cache_hits,
+                             "misses": self._plan_cache_misses}
         return out
+
+
+class _ShardedReport:
+    """HybridReport-shaped shim for sharded entries: format counts over
+    the per-shard plans, per-shard decision dicts as ``decisions``."""
+
+    def __init__(self, spm: Any):
+        self.decisions = spm.report()
+        self._formats = spm.plan.shard_formats()
+
+    def format_counts(self) -> Dict[str, int]:
+        counts: Dict[str, int] = {}
+        for f in self._formats:
+            counts[f] = counts.get(f, 0) + 1
+        return counts
 
 
 def _evicted(m, x):

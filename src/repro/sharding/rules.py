@@ -251,5 +251,7 @@ def _current_mesh() -> Optional[Mesh]:
 __all__ = [
     "ParamSpec", "stack_spec", "init_params", "axes_tree",
     "eval_shape_params", "param_count", "ShardingRules", "RULES_1POD",
-    "RULES_2POD", "logical_to_sharding", "with_logical_constraint",
+    "RULES_2POD", "RULES_SERVE", "RULES_ZERO1", "rules_for_mesh",
+    "use_rules", "active_rules", "logical_to_sharding",
+    "with_logical_constraint",
 ]

@@ -65,3 +65,37 @@ def run(scale: float = SCALE) -> List[Row]:
             derived={"pct_of_spmv": f"{100.0 * t / t_spmv:.4f}",
                      "spmv_ref": name}))
     return rows
+
+
+def run_guard(scale: float = SCALE) -> List[Row]:
+    """What the degradation ladder costs when nothing is degrading: a
+    GuardedImpl call on the happy path (breaker closed, no finite probe,
+    no budget).  The machinery — breaker admit, unarmed fault-registry
+    lookup, per-rung bookkeeping — is input-independent, so it is measured
+    around a trivial rung (subtracting the rung itself) and expressed
+    against one real tuned SpMV; timing the wrapped SpMV directly would
+    drown the few-µs delta in jit-dispatch jitter.  The acceptance bar is
+    < 2% of one SpMV."""
+    from repro.serve.guard import guard_ladder
+
+    name, csr = paper_suite(scale=scale, skip_ell_overflow=True,
+                            include=("ex19",))[0]
+    x = jnp.ones((csr.n_cols,), jnp.float32)
+    t_spmv = time_fn(jax.jit(spmv), csr, x, iters=ITERS)
+
+    def rung(v):
+        return v
+
+    guard = guard_ladder("bench", "spmv",
+                         [("tuned", rung), ("csr", rung)],
+                         fmt="csr", probe_finite=False)
+    t_bare = _per_call(lambda: rung(x))
+    t_guard = _per_call(lambda: guard(x))
+    overhead = max(t_guard - t_bare, 0.0)
+    return [
+        Row(name="guard/machinery", us_per_call=overhead * 1e6,
+            derived={"pct_of_spmv": f"{100.0 * overhead / t_spmv:.4f}",
+                     "breaker": "closed", "probe": "off",
+                     "spmv_us": f"{t_spmv * 1e6:.2f}",
+                     "spmv_ref": name}),
+    ]

@@ -22,7 +22,8 @@ from .common import print_rows
 
 
 SECTIONS = ("table1", "fig56", "fig7", "fig8", "hybrid", "spmm_batch",
-            "dstar", "moe", "kernels", "roofline", "obs", "sharded")
+            "dstar", "moe", "kernels", "roofline", "obs", "guard",
+            "sharded")
 
 QUICK_SCALE = 0.02
 
@@ -103,6 +104,7 @@ def main() -> None:
     section("kernels", kernels_bench.run)
     section("roofline", roofline.run)
     section("obs", obs_overhead.run, **scale_kw)
+    section("guard", obs_overhead.run_guard, **scale_kw)
     # runs in a subprocess under 8 forced host devices (the parent's jax
     # has already locked its device count)
     section("sharded", sharded_spmv.run, **scale_kw)

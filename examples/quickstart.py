@@ -37,3 +37,22 @@ for name in ("chem_master1", "memplus"):          # uniform vs heavy-tailed
     y = P @ x
     print(f"  SpMV ok: ||y||={float(jnp.linalg.norm(y)):.3f} "
           f"(format={P.fmt}, rule={plan2.rule})")
+
+# ---- serving (register once, query many) ---------------------------------
+# every query runs through a guarded degradation ladder (tuned ->
+# reference -> CSR), so a broken or fault-injected tuned tier degrades
+# instead of failing — see docs/robustness.md (REPRO_FAULTS exercises it)
+from repro.serve import SpMVService  # noqa: E402
+
+svc = SpMVService(max_batch=4)
+A = synthesize(next(s for s in TABLE1 if s.name == "chem_master1"),
+               scale=0.05)
+svc.register("demo", A, expected_iterations=50, measure_baseline=False)
+x = jnp.ones((A.n_cols,), jnp.float32)
+y = svc.spmv("demo", x)
+futs = [svc.submit("demo", x) for _ in range(3)]
+svc.flush()
+st = svc.stats()["demo"]
+g = st["guard"]["spmv"]
+print(f"service ok: ||y||={float(jnp.linalg.norm(y)):.3f} "
+      f"served_by={g['served_by']} breaker={g['breaker']['state']}")

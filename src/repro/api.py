@@ -36,7 +36,8 @@ from repro.core.autotune import (AutoTunedSpMV, Decision, MachineModel,
                                  decide_generalized, decide_paper,
                                  offline_phase)
 from repro.core.formats import (BCSR, BucketedELL, CCS, COO, CSR, ELL,
-                                MatrixStats, memory_bytes)
+                                MatrixStats, MatrixValidationError,
+                                memory_bytes)
 from repro.core.kernel_tune import (GeometryRecord, KernelTuner,
                                     TileGeometry, candidate_geometries,
                                     nearest_geometry)
@@ -45,11 +46,13 @@ from repro.core.plan import (SCHEMA_VERSION, SHARDED_SCHEMA_VERSION,
                              PlanFingerprint, PlanSchemaError, PlannedMatrix,
                              Planner, ShardedPlan, TransformRecipe,
                              apply_transform)
+from repro.core.plan_store import PlanStore, fingerprint_key
 from repro.core.policy import MemoryPolicy
 from repro.core.transform import (TRANSFORMS_HOST, csr_from_dense,
                                   csr_from_rows)
 from repro.obs import FakeClock, InMemorySink, JsonlSink, Telemetry
-from repro.serve import SpMVService
+from repro.serve import (AdmissionError, CircuitBreaker, EvictedError,
+                         GuardedImpl, GuardError, SpMVService, faults)
 from repro.sharding import ShardedPlannedMatrix, build_sharded, shard_csr
 from repro import obs
 
@@ -66,8 +69,10 @@ __all__ = [
     # kernel launch-geometry tuning
     "KernelTuner", "TileGeometry", "GeometryRecord",
     "candidate_geometries", "nearest_geometry",
-    # serving
-    "SpMVService",
+    # serving + fault tolerance (docs/robustness.md)
+    "SpMVService", "GuardedImpl", "CircuitBreaker", "GuardError",
+    "AdmissionError", "EvictedError", "faults",
+    "PlanStore", "fingerprint_key", "MatrixValidationError",
     # formats + construction
     "CSR", "CCS", "COO", "ELL", "BCSR", "BucketedELL", "MatrixStats",
     "memory_bytes", "csr_from_dense", "csr_from_rows", "TRANSFORMS_HOST",

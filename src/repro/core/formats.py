@@ -27,6 +27,14 @@ import numpy as np
 Array = Any  # np.ndarray | jax.Array
 
 
+class MatrixValidationError(ValueError):
+    """A sparse container's structural invariants do not hold (malformed
+    indptr, out-of-range indices, wrong dtypes).  Raised at the trust
+    boundaries — ``SpMVService.register`` and ``plan.bind`` — so corrupt
+    input fails loudly there instead of as NaN/garbage deep inside a
+    kernel (see docs/robustness.md)."""
+
+
 def _register(cls, data_fields, meta_fields):
     jax.tree_util.register_dataclass(cls, data_fields=list(data_fields),
                                      meta_fields=list(meta_fields))
@@ -72,6 +80,53 @@ class CSR:
             # duplicate (i, j) entries accumulate, matching SpMV semantics
             np.add.at(out[i], cols[s:e], data[s:e])
         return out
+
+    def validate(self) -> "CSR":
+        """Check the CSR structural invariants; raises
+        :class:`MatrixValidationError` on the first violation, returns
+        ``self`` for chaining.  One O(n + nnz) numpy pass — cheap at the
+        register/bind boundary relative to the transform it gates."""
+        ip = _np(self.indptr)
+        cols = _np(self.cols)
+        data = _np(self.data)
+        if ip.ndim != 1 or ip.shape[0] != self.n_rows + 1:
+            raise MatrixValidationError(
+                f"indptr must have shape ({self.n_rows + 1},); "
+                f"got {ip.shape}")
+        if not np.issubdtype(ip.dtype, np.integer):
+            raise MatrixValidationError(
+                f"indptr must be an integer array; got dtype {ip.dtype}")
+        if not np.issubdtype(cols.dtype, np.integer):
+            raise MatrixValidationError(
+                f"cols must be an integer array; got dtype {cols.dtype}")
+        if int(ip[0]) != 0:
+            raise MatrixValidationError(
+                f"indptr[0] must be 0; got {int(ip[0])}")
+        if np.any(ip[1:] < ip[:-1]):
+            i = int(np.argmax(ip[1:] < ip[:-1]))
+            raise MatrixValidationError(
+                f"indptr must be monotone non-decreasing; "
+                f"indptr[{i + 1}]={int(ip[i + 1])} < "
+                f"indptr[{i}]={int(ip[i])}")
+        if int(ip[-1]) != self.nnz:
+            raise MatrixValidationError(
+                f"indptr[-1] must equal nnz={self.nnz}; "
+                f"got {int(ip[-1])}")
+        if self.nnz > self.nnz_pad:
+            raise MatrixValidationError(
+                f"nnz={self.nnz} exceeds storage nnz_pad={self.nnz_pad}")
+        if cols.shape != data.shape:
+            raise MatrixValidationError(
+                f"cols and data must share a shape; "
+                f"got {cols.shape} vs {data.shape}")
+        if self.nnz > 0:
+            live = cols[: self.nnz]
+            lo, hi = int(live.min()), int(live.max())
+            if lo < 0 or hi >= self.n_cols:
+                raise MatrixValidationError(
+                    f"column indices must lie in [0, {self.n_cols}); "
+                    f"found range [{lo}, {hi}]")
+        return self
 
 
 _register(CSR, ("data", "cols", "indptr"), ("shape", "nnz"))
@@ -272,7 +327,7 @@ def __getattr__(name: str):
 
 __all__ = [
     "CSR", "CCS", "COO", "ELL", "BucketedELL", "MatrixStats",
-    "memory_bytes", "FORMAT_NAMES",
+    "MatrixValidationError", "memory_bytes", "FORMAT_NAMES",
 ]
 
 

@@ -420,6 +420,7 @@ class ExecutionPlan:
         as-is, no geometry attached) for compatibility with the old
         ``AutoTunedSpMV`` call sites."""
         tier = tier or self.tier
+        csr.validate()       # fail loudly here, not as garbage in a kernel
         matched = (self.fingerprint is not None
                    and self.fingerprint.matches(csr))
         if self.is_hybrid:
@@ -819,6 +820,7 @@ class ShardedPlan:
         but re-partitions on the new matrix; see
         :func:`repro.sharding.spmv.build_sharded`."""
         from repro.sharding.spmv import build_sharded
+        csr.validate()
         return build_sharded(csr, plan=self, **kw)
 
 
@@ -975,6 +977,23 @@ class Planner:
     def build(self, csr: CSR, **plan_kw) -> PlannedMatrix:
         """``plan(csr) .bind(csr)`` in one call."""
         return self.plan(csr, **plan_kw).bind(csr, db=self.db)
+
+    def plan_or_load(self, csr: CSR, store: Any, **plan_kw
+                     ) -> ExecutionPlan:
+        """Check a :class:`~repro.core.plan_store.PlanStore` before
+        planning: a stored plan whose fingerprint matches ``csr`` (under
+        the same planning knobs) replays with zero tuner invocations; a
+        miss — or a corrupted/stale entry, which the store quarantines
+        rather than raises — plans fresh and writes the result back, so
+        the whole fleet tunes a structure once."""
+        fp = PlanFingerprint.of(csr)
+        key = store.key_for(fp, **plan_kw)
+        cached = store.get(key, fingerprint=fp)
+        if cached is not None:
+            return cached
+        plan = self.plan(csr, **plan_kw)
+        store.put(key, plan)
+        return plan
 
     def plan_sharded(self, csr: CSR, *, n_shards: int, axis: str = "row",
                      strategy: str = "balanced_nnz", batch: int = 1,

@@ -1,4 +1,14 @@
+from . import faults
 from .engine import Request, ServeEngine
-from .spmv_service import MatrixEntry, SpMVService
+from .faults import FaultRegistry, InjectedFault
+from .guard import CircuitBreaker, GuardedImpl, GuardError, guard_ladder
+from .spmv_service import (AdmissionError, EvictedError, MatrixEntry,
+                           SpMVService)
 
-__all__ = ["Request", "ServeEngine", "MatrixEntry", "SpMVService"]
+__all__ = [
+    "Request", "ServeEngine", "MatrixEntry", "SpMVService",
+    # fault tolerance (docs/robustness.md)
+    "GuardedImpl", "CircuitBreaker", "GuardError", "guard_ladder",
+    "AdmissionError", "EvictedError",
+    "faults", "FaultRegistry", "InjectedFault",
+]

@@ -28,6 +28,22 @@ runs the kernel launch-geometry search once per block format — the paper's
 register-once/query-many amortization applied one level down, to the tile
 shapes themselves — and every subsequent query reuses the tuned geometry.
 
+Resilience (docs/robustness.md):
+
+  * every query runs through a :class:`~repro.serve.guard.GuardedImpl`
+    ladder — tuned → reference-format → reference-CSR — so a broken tuned
+    tier (exception, NaN output, blown budget) degrades instead of
+    failing; a per-``(key, format, op)`` circuit breaker stops paying the
+    failure cost per call and half-open-probes its way back;
+  * a :class:`~repro.core.plan_store.PlanStore` (``plan_store=``) shares
+    tuned plans across processes — tune once per fleet, not per replica —
+    with checksummed atomic persistence and quarantine-on-corruption;
+  * the micro-batch queue has admission control: a bounded per-key depth
+    (``max_queue``) under a ``reject`` / ``shed_oldest`` / ``block``
+    policy, deadline-aware rejection when the predicted wait exceeds
+    ``deadline_ms``, and eviction fails outstanding futures with a typed
+    :class:`EvictedError` instead of leaving them dangling.
+
 The service keeps jit-compiled dispatchers per registered matrix (compiled
 once per block structure), releases them on ``evict``/re-``register`` so
 long-lived services don't accumulate stale executables, and exposes the
@@ -35,6 +51,7 @@ per-matrix decisions and compile counts for observability.
 """
 from __future__ import annotations
 
+import hashlib
 import threading
 import time
 from concurrent.futures import Future
@@ -54,14 +71,44 @@ from repro.core.plan import (BlockPlan, ExecutionPlan, PlanFingerprint,
                              blocks_by_format, rederive_slab_bounds)
 from repro.core.spmv import spmv as spmv_ref
 from repro.core.policy import MemoryPolicy
-from repro.partition import HybridReport, build_hybrid, spmm_hybrid, spmv_hybrid
+from repro.partition import (HybridReport, build_hybrid, spmm_hybrid,
+                             spmv_hybrid)
+from repro.serve import faults as _faults
+from repro.serve.guard import CircuitBreaker, GuardedImpl, guard_ladder
+
+
+class AdmissionError(RuntimeError):
+    """The micro-batch queue refused a ``submit``: per-key depth bound
+    reached under the ``reject`` policy, a queued request was shed under
+    ``shed_oldest``, or the predicted wait exceeds ``deadline_ms``."""
+
+
+class EvictedError(KeyError, RuntimeError):
+    """The matrix entry was evicted (or re-registered away) while this
+    request was outstanding.  Subclasses ``KeyError`` (callers that
+    treated eviction as a missing key keep working) and ``RuntimeError``
+    (a released dispatcher has always raised one)."""
+
+
+def _swallow(where: str, err: BaseException) -> None:
+    """Account for an intentionally swallowed error — the service keeps
+    serving, but silent ``except: pass`` is how failures hide (this PR
+    exists because of that), so every swallow lands on a counter."""
+    tel = _obs.get()
+    if tel.enabled:
+        tel.counter("service.swallowed_errors", where=where,
+                    kind=type(err).__name__).inc()
+        tel.event("service.swallowed_error", where=where, error=repr(err))
 
 
 def _cache_size(fn: Optional[Callable]) -> int:
     """Compiled-executable count of a jitted dispatcher (0 if unavailable)."""
     try:
         return int(fn._cache_size())  # jax's jit wrapper
-    except Exception:
+    except (AttributeError, TypeError) as e:
+        # non-jitted callables (guards, overrides, evicted stubs) simply
+        # have no cache; anything else would be a bug worth surfacing
+        _swallow("cache_size", e)
         return 0
 
 
@@ -84,6 +131,10 @@ class MatrixEntry:
     from_plan: bool = False     # registration replayed a supplied plan
     max_batch: Optional[int] = None  # per-key panel width (plan-seeded);
     #                                  None falls through to the service's
+    source: Optional[CSR] = None     # kept for the reference-CSR rung
+    guards: Dict[str, GuardedImpl] = field(default_factory=dict)
+    flush_ema_s: float = 0.0    # EMA of flush latency, drives admission
+    shed: int = 0               # requests dropped by shed_oldest
     # pending entries are (future, vector, enqueue time) — the timestamp
     # drives the deadline flush policy
     pending: List[Tuple[Future, jax.Array, float]] = field(
@@ -123,6 +174,20 @@ class SpMVService:
     # from this clock, so deadline tests run on a FakeClock with no sleeps
     clock: Callable[[], float] = time.perf_counter
     entries: Dict[str, MatrixEntry] = field(default_factory=dict)
+    # -- resilience knobs (docs/robustness.md) -------------------------------
+    guard: bool = True          # serve through the degradation ladder
+    probe_finite: bool = True   # isfinite probe on non-final rungs
+    budget_ms: Optional[float] = None    # per-rung wall-clock budget
+    breaker_failures: int = 3   # consecutive failures before open
+    breaker_cooldown_s: float = 30.0     # open -> half-open probe delay
+    plan_store: Optional[Any] = None     # core.plan_store.PlanStore
+    max_queue: Optional[int] = None      # per-key pending-depth bound
+    admission: str = "reject"   # "reject" | "shed_oldest" | "block"
+    # breakers are keyed (key, format, op) and survive evict/re-register —
+    # a matrix that keeps breaking stays broken across rebuilds until a
+    # half-open probe proves otherwise
+    _breakers: Dict[Tuple[str, str, str], CircuitBreaker] = field(
+        default_factory=dict, repr=False)
     # fingerprint-keyed plan cache: registering a matrix whose structure
     # matches an evicted/previous registration replays the cached plan
     # instead of re-tuning (survives evict — it lives on the service)
@@ -131,6 +196,11 @@ class SpMVService:
                                                     repr=False)
     _plan_cache_hits: int = 0
     _plan_cache_misses: int = 0
+
+    def _now(self) -> float:
+        """Every service timestamp flows through here so the
+        ``clock.skew`` fault point can distort it deterministically."""
+        return _faults.skew(self.clock())
 
     # -- launch-geometry tuning at registration ------------------------------
     def _impl_bases(self) -> Dict[str, Dict[str, Callable]]:
@@ -188,6 +258,49 @@ class SpMVService:
                 bind_tunings(bases["spmm"], tunings.get("spmm", {})),
                 tunings)
 
+    # -- the degradation ladder ----------------------------------------------
+    def _breaker(self, key: str, fmt: str, op: str) -> CircuitBreaker:
+        bk = (key, fmt, op)
+        br = self._breakers.get(bk)
+        if br is None:
+            br = self._breakers[bk] = CircuitBreaker(
+                key=key, fmt=fmt, op=op, failures=self.breaker_failures,
+                cooldown_s=self.breaker_cooldown_s, clock=self._now)
+        return br
+
+    def _build_guards(self, key: str, csr: CSR, matrix: Any,
+                      fn: Callable, spmm_fn: Callable,
+                      fmt: str, sharded: bool = False
+                      ) -> Dict[str, GuardedImpl]:
+        """The per-(key, op) ladders: tuned → reference-format →
+        reference-CSR (sharded entries skip the middle rung — their
+        reference tier *is* per-shard CSR).  The source matrix is kept on
+        the entry purely so the last rung always exists."""
+        if not self.guard:
+            return {}
+        budget_s = self.budget_ms / 1e3 if self.budget_ms else None
+        csr_mv = jax.jit(spmv_ref)
+        csr_mm = jax.jit(_dispatch.get_impl("csr", "spmm", "reference"))
+        rungs: Dict[str, List[Tuple[str, Callable]]] = {
+            "spmv": [("tuned", lambda x: fn(matrix, x))],
+            "spmm": [("tuned", lambda x: spmm_fn(matrix, x))],
+        }
+        if not sharded:
+            ref_mv = jax.jit(lambda m, x: spmv_hybrid(m, x))
+            ref_mm = jax.jit(lambda m, x: spmm_hybrid(m, x))
+            rungs["spmv"].append(("reference",
+                                  lambda x: ref_mv(matrix, x)))
+            rungs["spmm"].append(("reference",
+                                  lambda x: ref_mm(matrix, x)))
+        rungs["spmv"].append(("csr", lambda x: csr_mv(csr, x)))
+        rungs["spmm"].append(("csr", lambda x: csr_mm(csr, x)))
+        return {op: guard_ladder(
+            key, op, rungs[op], fmt=fmt,
+            breaker=self._breaker(key, fmt, op),
+            probe_finite=self.probe_finite, budget_s=budget_s,
+            clock=self._now) for op in ("spmv", "spmm")}
+
+    # -- registration --------------------------------------------------------
     def register(self, key: str, csr: CSR, expected_iterations: int = 100,
                  measure_baseline: bool = True, batch: int = 1,
                  plan: Optional[ExecutionPlan] = None,
@@ -222,10 +335,14 @@ class SpMVService:
         width (``entry.max_batch``) instead of the service default.
 
         Without a supplied plan, a fingerprint-keyed plan cache is
-        consulted first: re-registering a matrix whose structure matches
-        a previous registration (same key or not, even after ``evict``)
-        replays the cached plan with zero re-tuning; hits/misses land in
-        ``stats()['plan_cache']``."""
+        consulted first — and behind it the persistent ``plan_store``
+        (shared across processes): re-registering a matrix whose structure
+        matches a previous registration, *anywhere in the fleet*, replays
+        the stored plan with zero re-tuning; a fresh build writes its plan
+        back.  Hits/misses land in ``stats()['plan_cache']`` /
+        ``stats()['plan_store']``."""
+        csr.validate()       # malformed input fails here, typed, not as
+        #                      garbage inside a kernel (MatrixValidationError)
         if isinstance(plan, ShardedPlan):
             return self._register_sharded(
                 key, csr, plan, expected_iterations=expected_iterations,
@@ -236,7 +353,7 @@ class SpMVService:
         prior = self.entries.get(key)
         builds = prior.builds + 1 if prior is not None else 1
         tel = _obs.get()
-        cache_key = None
+        cache_key = store_key = None
         if plan is None:
             cache_key = self._plan_cache_key(csr, expected_iterations,
                                              batch, build_kw)
@@ -250,34 +367,36 @@ class SpMVService:
                 self._plan_cache_misses += 1
             if tel.enabled:
                 tel.counter("service.plan_cache", key=key, hit=hit).inc()
+            if plan is None and self.plan_store is not None:
+                # fleet-level fallback behind the in-process cache: a
+                # corrupted entry is quarantined inside get() and reads
+                # as a miss — never raised to the caller
+                store_key = self._store_key(cache_key)
+                stored = self.plan_store.get(store_key, fingerprint=csr)
+                if stored is not None and not isinstance(stored,
+                                                         ShardedPlan):
+                    plan = stored
+                if tel.enabled:
+                    tel.counter("service.plan_store", key=key,
+                                hit=plan is not None).inc()
         plan_matched = (plan is not None and plan.fingerprint is not None
                         and plan.fingerprint.matches(csr))
         if tel.enabled and plan is not None:
             tel.counter("service.plan_replay", key=key,
                         hit=plan_matched).inc()
             tel.event("service.plan_replay", key=key, hit=plan_matched)
-        t0 = self.clock()
+        t0 = self._now()
         with tel.span("service.register", key=key, n=csr.n_rows,
                       nnz=csr.nnz, batch=batch,
                       plan_matched=plan_matched) as reg_span:
-            if plan_matched:
-                hyb, report = plan.materialize(csr)
-                impls, spmm_impls, tunings = self._plan_impls(hyb, plan)
-                entry_plan = plan
-            else:
-                hyb, report = build_hybrid(
-                    csr, strategy=self.strategy, db=self.db,
-                    model=self.model, policy=self.policy,
-                    expected_iterations=expected_iterations,
-                    batch=batch, **build_kw)
-                impls, spmm_impls, tunings = self._tuned_impls(hyb)
-                entry_plan = self._derive_plan(csr, hyb, report, tunings,
-                                               expected_iterations, batch,
-                                               build_kw)
+            hyb, report, impls, spmm_impls, tunings, entry_plan, \
+                plan_matched = self._build_operator(
+                    key, csr, plan, plan_matched, expected_iterations,
+                    batch, build_kw, tel)
             fn = jax.jit(lambda m, x: spmv_hybrid(m, x, impls=impls))
             spmm_fn = jax.jit(
                 lambda m, x: spmm_hybrid(m, x, impls=spmm_impls))
-            t_build = self.clock() - t0
+            t_build = self._now() - t0
             reg_span.set(t_build=t_build, n_blocks=hyb.n_blocks)
         t_csr = t_hyb = 0.0
         if measure_baseline:
@@ -285,10 +404,13 @@ class SpMVService:
             t_csr = time_fn(jax.jit(spmv_ref), csr, x0, iters=1,
                             warmup=1)
             t_hyb = time_fn(fn, hyb, x0, iters=1, warmup=1)
+        guards = self._build_guards(key, csr, hyb, fn, spmm_fn,
+                                    fmt="hybrid")
         entry = MatrixEntry(matrix=hyb, report=report, fn=fn,
                             spmm_fn=spmm_fn, t_build=t_build, t_csr=t_csr,
                             t_hybrid=t_hyb, builds=builds, tunings=tunings,
                             plan=entry_plan, from_plan=plan_matched,
+                            source=csr, guards=guards,
                             max_batch=(plan.batch if plan is not None
                                        and plan.batch > 1 else None))
         if cache_key is not None and entry_plan is not None \
@@ -296,16 +418,69 @@ class SpMVService:
             self._plan_cache[cache_key] = entry_plan
             while len(self._plan_cache) > self.plan_cache_max:
                 self._plan_cache.pop(next(iter(self._plan_cache)))
+            if self.plan_store is not None:
+                # tune once per fleet: publish the freshly minted plan
+                if store_key is None:
+                    store_key = self._store_key(cache_key)
+                try:
+                    self.plan_store.put(store_key, entry_plan)
+                except OSError as e:
+                    # a full/readonly disk must not fail registration —
+                    # the plan still serves from memory
+                    _swallow("plan_store_put", e)
         self.entries[key] = entry
         if prior is not None:
             # the old operator was valid to the end: serve its queued
             # vectors before releasing it rather than failing their futures
             try:
                 self._flush_entry(prior, key=key, cause="reregister")
-            except Exception:
-                pass  # the panel's futures already carry the exception
+            except (RuntimeError, ValueError, TypeError,
+                    ArithmeticError) as e:
+                # the panel's futures already carry the exception; the
+                # swallow is accounted, not silent
+                _swallow("reregister_flush", e)
             self._release(key, prior)
         return entry
+
+    def _build_operator(self, key: str, csr: CSR, plan, plan_matched: bool,
+                        expected_iterations: int, batch: int,
+                        build_kw: Dict[str, Any], tel):
+        """Materialize-or-build with degrade-don't-die semantics: a plan
+        replay or hybrid build whose *transform* fails (``transform.raise``
+        fault, or an organic conversion bug) falls back to a single-block
+        reference-CSR registration — serving correct results at baseline
+        speed beats not serving."""
+        try:
+            if plan_matched:
+                hyb, report = plan.materialize(csr)
+                impls, spmm_impls, tunings = self._plan_impls(hyb, plan)
+                return (hyb, report, impls, spmm_impls, tunings, plan,
+                        plan_matched)
+            hyb, report = build_hybrid(
+                csr, strategy=self.strategy, db=self.db,
+                model=self.model, policy=self.policy,
+                expected_iterations=expected_iterations,
+                batch=batch, **build_kw)
+            impls, spmm_impls, tunings = self._tuned_impls(hyb)
+            entry_plan = self._derive_plan(csr, hyb, report, tunings,
+                                           expected_iterations, batch,
+                                           build_kw)
+            return (hyb, report, impls, spmm_impls, tunings, entry_plan,
+                    plan_matched)
+        except (RuntimeError, ValueError, TypeError, KeyError) as e:
+            if tel.enabled:
+                tel.counter("service.fallback", key=key, op="register",
+                            rung="csr").inc()
+                tel.event("service.register_degraded", key=key,
+                          error=repr(e))
+            csr_plan = ExecutionPlan(
+                fmt="csr", rule="degraded", tier="reference",
+                batch=max(int(batch), 1),
+                expected_iterations=max(int(expected_iterations), 1),
+                fingerprint=PlanFingerprint.of(csr))
+            hyb, report = csr_plan.materialize(csr)
+            return (hyb, report, self.impls, self.spmm_impls, {},
+                    csr_plan, False)
 
     def _derive_plan(self, csr: CSR, hyb, report, tunings,
                      expected_iterations: int, batch: int,
@@ -342,7 +517,7 @@ class SpMVService:
             machine=self.db.machine if self.db is not None else "cost_model",
             d_mat=fp.d_mat, d_star=float("nan"), blocks=blocks)
 
-    # -- plan cache / sharded registration -----------------------------------
+    # -- plan cache / store / sharded registration ---------------------------
     def _plan_cache_key(self, csr: CSR, expected_iterations: int,
                         batch: int, build_kw: Dict[str, Any]) -> Tuple:
         """Structure + registration knobs: a cached plan only replays for
@@ -351,6 +526,12 @@ class SpMVService:
         return (fp.n, fp.nnz, fp.sig, int(batch), int(expected_iterations),
                 self.strategy,
                 tuple(sorted((k, repr(v)) for k, v in build_kw.items())))
+
+    @staticmethod
+    def _store_key(cache_key: Tuple) -> str:
+        """The plan cache's identity, made process-portable: the tuple is
+        ints/strings only, so its repr is stable across interpreters."""
+        return hashlib.sha256(repr(cache_key).encode("utf-8")).hexdigest()
 
     def _register_sharded(self, key: str, csr: CSR, plan: ShardedPlan,
                           expected_iterations: int = 100,
@@ -367,7 +548,7 @@ class SpMVService:
             tel.counter("service.plan_replay", key=key, hit=matched).inc()
             tel.event("service.plan_replay", key=key, hit=matched,
                       sharded=True)
-        t0 = self.clock()
+        t0 = self._now()
         with tel.span("service.register", key=key, n=csr.n_rows,
                       nnz=csr.nnz, batch=batch, plan_matched=matched,
                       sharded=True) as reg_span:
@@ -379,7 +560,7 @@ class SpMVService:
             def spmm_fn(m, x):
                 return m.spmm(x)
 
-            t_build = self.clock() - t0
+            t_build = self._now() - t0
             reg_span.set(t_build=t_build, n_blocks=spm.n_shards,
                          mode=spm.mode)
         t_csr = t_hyb = 0.0
@@ -387,27 +568,39 @@ class SpMVService:
             x0 = jnp.ones((csr.n_cols,), jnp.float32)
             t_csr = time_fn(jax.jit(spmv_ref), csr, x0, iters=1, warmup=1)
             t_hyb = time_fn(fn, spm, x0, iters=1, warmup=1)
+        guards = self._build_guards(key, csr, spm, fn, spmm_fn,
+                                    fmt="sharded", sharded=True)
         entry = MatrixEntry(matrix=spm, report=_ShardedReport(spm), fn=fn,
                             spmm_fn=spmm_fn, t_build=t_build, t_csr=t_csr,
                             t_hybrid=t_hyb, builds=builds, tunings={},
                             plan=plan, from_plan=matched,
+                            source=csr, guards=guards,
                             max_batch=plan.batch if plan.batch > 1
                             else None)
         self.entries[key] = entry
         if prior is not None:
             try:
                 self._flush_entry(prior, key=key, cause="reregister")
-            except Exception:
-                pass
+            except (RuntimeError, ValueError, TypeError,
+                    ArithmeticError) as e:
+                _swallow("reregister_flush", e)
             self._release(key, prior)
         return entry
 
     # -- direct paths --------------------------------------------------------
+    def _run(self, entry: MatrixEntry, op: str, x: jax.Array) -> jax.Array:
+        """One guarded (or raw) operator application."""
+        g = entry.guards.get(op)
+        if g is not None:
+            return jax.block_until_ready(g(x))
+        fn = entry.fn if op == "spmv" else entry.spmm_fn
+        return jax.block_until_ready(fn(entry.matrix, x))
+
     def spmv(self, key: str, x: jax.Array) -> jax.Array:
         entry = self.entries[key]
-        t0 = self.clock()
-        y = jax.block_until_ready(entry.fn(entry.matrix, jnp.asarray(x)))
-        dt = self.clock() - t0
+        t0 = self._now()
+        y = self._run(entry, "spmv", jnp.asarray(x))
+        dt = self._now() - t0
         with entry.lock:
             entry.n_calls += 1
             entry.t_serve += dt
@@ -423,9 +616,9 @@ class SpMVService:
         x = jnp.asarray(x)
         if x.ndim != 2:
             raise ValueError(f"spmm expects (n_cols, B); got {x.shape}")
-        t0 = self.clock()
-        y = jax.block_until_ready(entry.spmm_fn(entry.matrix, x))
-        dt = self.clock() - t0
+        t0 = self._now()
+        y = self._run(entry, "spmm", x)
+        dt = self._now() - t0
         with entry.lock:
             entry.n_spmm_calls += 1
             entry.n_spmm_cols += int(x.shape[1])
@@ -437,23 +630,80 @@ class SpMVService:
         return y
 
     # -- micro-batching queue ------------------------------------------------
+    def _admit(self, entry: MatrixEntry, key: str, now: float) -> None:
+        """Admission control under ``entry.lock``: bounded depth per the
+        configured policy, plus deadline-aware rejection when the
+        predicted wait (panels ahead × recent flush latency) already
+        exceeds ``deadline_ms``.  Raises :class:`AdmissionError`."""
+        tel = _obs.get()
+        depth = len(entry.pending)
+        limit = self.max_queue
+        if limit is not None and depth >= limit:
+            if self.admission == "shed_oldest":
+                fut, _, t_enq = entry.pending.pop(0)
+                entry.shed += 1
+                fut.set_exception(AdmissionError(
+                    f"request shed after {(now - t_enq) * 1e3:.1f}ms: "
+                    f"queue for {key!r} at depth bound {limit}"))
+                if tel.enabled:
+                    tel.counter("service.admission", key=key,
+                                action="shed").inc()
+            else:                       # "reject" (and unknown values)
+                if tel.enabled:
+                    tel.counter("service.admission", key=key,
+                                action="reject").inc()
+                raise AdmissionError(
+                    f"queue for {key!r} is at its depth bound "
+                    f"({limit}); retry later or flush")
+        if self.deadline_ms is not None and entry.flush_ema_s > 0.0:
+            panel = entry.max_batch or self.max_batch
+            panels_ahead = len(entry.pending) // max(panel, 1) + 1
+            predicted_ms = panels_ahead * entry.flush_ema_s * 1e3
+            if predicted_ms > self.deadline_ms:
+                if tel.enabled:
+                    tel.counter("service.admission", key=key,
+                                action="deadline").inc()
+                raise AdmissionError(
+                    f"predicted wait {predicted_ms:.1f}ms exceeds the "
+                    f"{self.deadline_ms}ms deadline for {key!r}")
+
     def submit(self, key: str, x: jax.Array) -> "Future":
         """Enqueue one SpMV; resolved by ``flush`` (auto at ``max_batch``,
         or as soon as the oldest pending future is past ``deadline_ms``)
-        through a single SpMM call per matrix."""
+        through a single SpMM call per matrix.
+
+        With ``max_queue`` set, a full queue is handled per the
+        ``admission`` policy: ``reject`` raises :class:`AdmissionError`,
+        ``shed_oldest`` fails the oldest pending future to make room,
+        ``block`` flushes synchronously until there is room."""
         entry = self.entries[key]
         x = jnp.asarray(x)
         if x.shape != (entry.matrix.n_cols,):
             # reject here so one bad vector can never poison a whole panel
             raise ValueError(f"expected x of shape ({entry.matrix.n_cols},); "
                              f"got {x.shape}")
+        if self.max_queue is not None and self.admission == "block":
+            # make room by serving, not by waiting: each flush drains the
+            # queue entirely, so one pass always admits
+            while True:
+                with entry.lock:
+                    if entry.dead:
+                        raise EvictedError(f"matrix {key!r} was evicted")
+                    if len(entry.pending) < self.max_queue:
+                        break
+                tel = _obs.get()
+                if tel.enabled:
+                    tel.counter("service.admission", key=key,
+                                action="block").inc()
+                self._flush_entry(entry, key=key, cause="admission")
         fut: Future = Future()
-        now = self.clock()
+        now = self._now()
         with entry.lock:
             if entry.dead:
                 # racing evict/re-register: never enqueue onto a released
                 # entry — nothing would ever flush it
-                raise KeyError(f"matrix {key!r} was evicted")
+                raise EvictedError(f"matrix {key!r} was evicted")
+            self._admit(entry, key, now)
             entry.pending.append((fut, x, now))
             depth = len(entry.pending)
             full = depth >= (entry.max_batch or self.max_batch)
@@ -473,7 +723,7 @@ class SpMVService:
         number of vectors served (0 when no deadline is configured)."""
         if self.deadline_ms is None:
             return 0
-        now = self.clock()
+        now = self._now()
         served = 0
         for k in list(self.entries):
             e = self.entries.get(k)
@@ -525,14 +775,14 @@ class SpMVService:
                 panel = entry.max_batch or self.max_batch
                 if self.pad_batches and b < panel:
                     X = jnp.pad(X, ((0, 0), (0, panel - b)))
-                t0 = self.clock()
-                Y = jax.block_until_ready(entry.spmm_fn(entry.matrix, X))
+                t0 = self._now()
+                Y = self._run(entry, "spmm", X)
             except Exception as e:
                 # never strand a future: the whole panel fails together
                 for fut, _, _ in batch:
                     fut.set_exception(e)
                 raise
-            dt = self.clock() - t0
+            dt = self._now() - t0
         if tel.enabled:
             tel.counter("service.flush", key=key, cause=cause).inc()
             tel.gauge("service.queue_depth", key=key).set(0)
@@ -543,6 +793,10 @@ class SpMVService:
             entry.n_spmm_calls += 1
             entry.n_spmm_cols += b
             entry.t_serve += dt
+            # the admission controller's wait predictor: a slow-moving EMA
+            # of flush latency (zero-cost under FakeClock — dt stays 0)
+            entry.flush_ema_s = (dt if entry.flush_ema_s == 0.0
+                                 else 0.3 * dt + 0.7 * entry.flush_ema_s)
         for i, (fut, _, _) in enumerate(batch):
             fut.set_result(Y[:, i])
         return b
@@ -558,9 +812,14 @@ class SpMVService:
         with entry.lock:
             entry.dead = True
             stranded, entry.pending = entry.pending, []
+        if stranded:
+            tel = _obs.get()
+            if tel.enabled:
+                tel.counter("service.evicted_futures", key=key).inc(
+                    len(stranded))
         for fut, _, _ in stranded:
-            fut.set_exception(KeyError(f"matrix {key!r} evicted with "
-                                       "requests pending"))
+            fut.set_exception(EvictedError(
+                f"matrix {key!r} evicted with requests pending"))
         for fn in (entry.fn, entry.spmm_fn):
             clear = getattr(fn, "clear_cache", None)
             if callable(clear):
@@ -568,6 +827,8 @@ class SpMVService:
         # drop the jitted closures so the executables are collectable even
         # if a caller keeps the MatrixEntry alive
         entry.fn = entry.spmm_fn = _evicted
+        entry.guards = {}
+        entry.source = None
 
     def _entry_telemetry(self, key: str) -> Dict[str, Any]:
         """This key's slice of the process telemetry (query-latency
@@ -587,11 +848,13 @@ class SpMVService:
 
     def stats(self) -> Dict[str, Dict[str, Any]]:
         """Per-matrix observability: block formats, build/serve time,
-        compile counts, micro-batch throughput, and amortization — the
-        paper's k*B*(t_crs - t_f) > t_trans with k*B the products served so
-        far (None when the baseline was not measured).  With telemetry
-        enabled each entry also carries its ``"telemetry"`` slice —
-        latency-histogram summaries, flush-cause counters, queue depth."""
+        compile counts, micro-batch throughput, guard/breaker health, and
+        amortization — the paper's k*B*(t_crs - t_f) > t_trans with k*B
+        the products served so far (None when the baseline was not
+        measured).  With telemetry enabled each entry also carries its
+        ``"telemetry"`` slice — latency-histogram summaries, flush-cause
+        counters, queue depth.  ``"guard"`` maps op → ladder snapshot
+        (per-rung serve counts, failures, breaker state machine)."""
         out = {}
         for key, e in self.entries.items():
             products = e.n_calls + e.n_spmm_cols
@@ -608,6 +871,7 @@ class SpMVService:
                 "n_spmm_calls": e.n_spmm_calls,
                 "n_spmm_cols": e.n_spmm_cols,
                 "pending": len(e.pending),
+                "shed": e.shed,
                 "builds": e.builds,
                 "compiled": e.compile_count(),
                 "tuned": {op: {f: g.to_dict() for f, g in per.items()}
@@ -625,16 +889,24 @@ class SpMVService:
                     "batch": e.plan.batch,
                     "from_plan": e.from_plan,   # registration replayed one
                 }),
+                "guard": {op: g.snapshot() for op, g in e.guards.items()},
                 "t_serve_s": e.t_serve,
                 "amortized": (None if saved is None
                               else saved >= e.t_build),
                 "telemetry": self._entry_telemetry(key),
             }
-        # reserved key (no matrix may register under it): the service-wide
-        # plan-cache health — consumers index stats() by matrix key
+        # reserved keys (no matrix may register under them): service-wide
+        # plan-cache / plan-store / breaker health — consumers index
+        # stats() by matrix key
         out["plan_cache"] = {"size": len(self._plan_cache),
                              "hits": self._plan_cache_hits,
                              "misses": self._plan_cache_misses}
+        if self.plan_store is not None:
+            out["plan_store"] = self.plan_store.stats()
+        if self._breakers:
+            out["breakers"] = {
+                "/".join(bk): br.snapshot()
+                for bk, br in self._breakers.items()}
         return out
 
 
@@ -654,7 +926,7 @@ class _ShardedReport:
 
 
 def _evicted(m, x):
-    raise RuntimeError("this matrix entry was evicted; re-register it")
+    raise EvictedError("this matrix entry was evicted; re-register it")
 
 
-__all__ = ["SpMVService", "MatrixEntry"]
+__all__ = ["SpMVService", "MatrixEntry", "AdmissionError", "EvictedError"]

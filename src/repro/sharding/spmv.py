@@ -213,12 +213,50 @@ class ShardedPlannedMatrix:
         self._exec_fns = exec_fns       # shard_map: jitted dispatchers
         self._nbytes = nbytes
         self._devices = []
+        self.shard_guards: List[Dict[str, Any]] = []
         if planned is not None and mode == "dispatch":
             devs = jax.devices()
             self._devices = [devs[i % len(devs)]
                              for i in range(len(planned))]
             for pm, dev in zip(planned, self._devices):
                 pm.matrix = jax.device_put(pm.matrix, dev)
+            self.shard_guards = self._build_shard_guards()
+
+    def _build_shard_guards(self) -> List[Dict[str, Any]]:
+        """Dispatch mode serves shards one by one on the host, so each
+        shard gets its own degradation ladder: the bound per-shard impl
+        backed by reference-CSR on that shard's source slice.  Exception
+        faults demote a single shard instead of failing the whole product;
+        finiteness is *not* probed per shard (that would add one device
+        sync per shard per call) — the service-level guard already probes
+        the assembled output end-to-end."""
+        # lazy: sharding must stay importable without the serve package
+        from repro.core.spmv import spmv as _spmv_ref
+        from repro.core import dispatch as _dispatch
+        from repro.serve.guard import guard_ladder
+        ref_mv = jax.jit(_spmv_ref)
+        ref_mm = jax.jit(_dispatch.get_impl("csr", "spmm", "reference"))
+        guards = []
+        for i, pm in enumerate(self.planned):
+            src = pm.source
+            guards.append({
+                "spmv": guard_ladder(
+                    f"shard{i}", "spmv",
+                    [("tuned", lambda xi, _pm=pm: _pm.spmv(xi)),
+                     ("csr", lambda xi, _s=src: ref_mv(_s, xi))],
+                    fmt=pm.fmt, probe_finite=False),
+                "spmm": guard_ladder(
+                    f"shard{i}", "spmm",
+                    [("tuned", lambda xi, _pm=pm: _pm.spmm(xi)),
+                     ("csr", lambda xi, _s=src: ref_mm(_s, xi))],
+                    fmt=pm.fmt, probe_finite=False),
+            })
+        return guards
+
+    def guard_report(self) -> List[Dict[str, Any]]:
+        """Per-shard ladder snapshots (dispatch mode; empty otherwise)."""
+        return [{op: g.snapshot() for op, g in shard.items()}
+                for shard in self.shard_guards]
 
     # -- views ---------------------------------------------------------------
     fmt = "sharded"
@@ -289,7 +327,10 @@ class ShardedPlannedMatrix:
                 else:
                     with tel.span("shard.gather", shard=i):
                         xi = x[int(b[i]): int(b[i + 1])]
-                parts.append(getattr(pm, op)(xi))
+                if self.shard_guards:
+                    parts.append(self.shard_guards[i][op](xi))
+                else:
+                    parts.append(getattr(pm, op)(xi))
         if self._devices:
             # partials live where their shards ran; reassembly needs them
             # on one device (concatenate/add refuse cross-device args)

@@ -1,0 +1,330 @@
+"""The crash-safe persistent plan store: atomic checksummed round trips,
+quarantine-never-raise on every corruption class, concurrency (racing
+writers, mid-race readers), and the service/planner integration — a second
+process registers with zero tuner invocations."""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+import repro.obs as obs
+from repro.obs import FakeClock, InMemorySink, Telemetry
+from repro.core.kernel_tune import KernelTuner
+from repro.core.autotune import TuningDB
+from repro.core.plan import ExecutionPlan, PlanFingerprint, Planner
+from repro.core.plan_store import BAD_DIR, PlanStore, fingerprint_key
+from repro.core.transform import csr_from_dense
+from repro.serve import faults
+from repro.serve.spmv_service import SpMVService
+
+
+@pytest.fixture()
+def tel():
+    t = Telemetry(enabled=True, clock=FakeClock(), sinks=[InMemorySink()])
+    prev = obs.set_default(t)
+    yield t
+    obs.set_default(prev)
+
+
+@pytest.fixture(autouse=True)
+def clean_faults():
+    faults.clear()
+    yield
+    faults.clear()
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(11)
+
+
+@pytest.fixture(scope="module")
+def problem(rng):
+    d = (rng.random((60, 140)) < 0.12).astype(np.float32)
+    dense = d * rng.normal(1.0, 1.0, size=d.shape).astype(np.float32)
+    return dense, csr_from_dense(dense, pad=8)
+
+
+def make_plan(csr, fmt="ell_row") -> ExecutionPlan:
+    return ExecutionPlan(fmt=fmt, fingerprint=PlanFingerprint.of(csr))
+
+
+def fake_timer(prefer_rows=32):
+    calls = []
+
+    def timer(thunk, g):
+        thunk()
+        calls.append(g)
+        if g is None:
+            return 1.0
+        return 0.5 + abs((g.block_rows or prefer_rows) - prefer_rows) * 1e-3
+
+    timer.calls = calls
+    return timer
+
+
+# ---------------------------------------------------------------------------
+# round trips + keys
+# ---------------------------------------------------------------------------
+def test_round_trip(problem, tmp_path):
+    _, csr = problem
+    store = PlanStore(str(tmp_path / "plans"))
+    plan = make_plan(csr)
+    key = store.key_for(csr, batch=4)
+    path = store.put(key, plan)
+    assert os.path.exists(path)
+    loaded = store.get(key)
+    assert loaded is not None
+    assert loaded.to_dict() == plan.to_dict()
+    assert store.stats()["hits"] == 1 and store.stats()["writes"] == 1
+    assert len(store) == 1
+
+
+def test_keys_are_deterministic_and_knob_sensitive(problem):
+    _, csr = problem
+    fp = PlanFingerprint.of(csr)
+    assert fingerprint_key(fp, batch=4) == fingerprint_key(fp, batch=4)
+    assert fingerprint_key(fp, batch=4) != fingerprint_key(fp, batch=8)
+    assert fingerprint_key(fp) != fingerprint_key(fp, strategy="variance")
+
+
+def test_missing_key_is_a_miss_not_an_error(tmp_path):
+    store = PlanStore(str(tmp_path))
+    assert store.get("0" * 64) is None
+    assert store.stats()["misses"] == 1
+
+
+def test_fingerprint_mismatch_is_a_miss_not_quarantine(problem, rng,
+                                                       tmp_path):
+    _, csr = problem
+    other = csr_from_dense(
+        (rng.random((30, 140)) < 0.2).astype(np.float32), pad=8)
+    store = PlanStore(str(tmp_path))
+    key = store.key_for(csr)
+    store.put(key, make_plan(csr))
+    assert store.get(key, fingerprint=other) is None
+    # the entry is valid for its own matrix: still on disk, not .bad
+    assert store.get(key, fingerprint=csr) is not None
+    assert store.stats()["quarantined"] == 0
+
+
+def test_atomic_write_leaves_no_temp_files(problem, tmp_path):
+    _, csr = problem
+    store = PlanStore(str(tmp_path))
+    for i in range(5):
+        store.put(store.key_for(csr, i=i), make_plan(csr))
+    leftovers = [n for n in os.listdir(str(tmp_path))
+                 if n.startswith(".tmp-")]
+    assert leftovers == []
+
+
+# ---------------------------------------------------------------------------
+# corruption -> quarantine, never raise
+# ---------------------------------------------------------------------------
+def corrupt_file(store, key, raw):
+    with open(store.path_for(key), "w") as f:
+        f.write(raw)
+
+
+@pytest.mark.parametrize("raw,reason", [
+    ('{"store_version": 1, "sha256": "tru', "not_json"),       # torn write
+    ('{"something": "else"}', "bad_envelope"),
+    ('{"store_version": 99, "sha256": "x", "plan": {}}', "store_version"),
+    ('{"store_version": 1, "sha256": "x", "plan": []}', "bad_payload"),
+    ('{"store_version": 1, "sha256": "wrong", "plan": {"fmt": "csr"}}',
+     "checksum"),
+])
+def test_each_corruption_class_quarantines(problem, tmp_path, raw, reason,
+                                           tel):
+    _, csr = problem
+    store = PlanStore(str(tmp_path))
+    key = store.key_for(csr)
+    store.put(key, make_plan(csr))
+    corrupt_file(store, key, raw)
+    assert store.get(key) is None                 # never raises
+    assert not os.path.exists(store.path_for(key))
+    bad = os.listdir(os.path.join(str(tmp_path), BAD_DIR))
+    assert len(bad) == 1 and reason in bad[0]
+    assert store.stats()["quarantined"] == 1
+    events = [e for e in tel.sinks[0].named("store.quarantine")
+              if e["type"] == "event"]
+    assert events and events[0]["attrs"]["reason"] == reason
+    # the slot is reusable after quarantine
+    store.put(key, make_plan(csr))
+    assert store.get(key) is not None
+
+
+def test_schema_incompatible_payload_quarantines(problem, tmp_path):
+    _, csr = problem
+    store = PlanStore(str(tmp_path))
+    key = store.key_for(csr)
+    store.put(key, make_plan(csr))
+    with open(store.path_for(key)) as f:
+        env = json.load(f)
+    env["plan"]["schema_version"] = 999           # a future writer
+    import hashlib
+    env["sha256"] = hashlib.sha256(json.dumps(
+        env["plan"], sort_keys=True,
+        separators=(",", ":")).encode()).hexdigest()
+    corrupt_file(store, key, json.dumps(env))
+    assert store.get(key) is None
+    bad = os.listdir(os.path.join(str(tmp_path), BAD_DIR))
+    assert len(bad) == 1 and "schema" in bad[0]
+
+
+def test_store_corrupt_fault_point_round_trip(problem, tmp_path):
+    _, csr = problem
+    store = PlanStore(str(tmp_path))
+    key = store.key_for(csr)
+    with faults.inject("store.corrupt", prob=1.0):
+        store.put(key, make_plan(csr))
+    assert store.get(key) is None                 # checksum catches it
+    assert store.stats()["quarantined"] == 1
+    store.put(key, make_plan(csr))                # clean rewrite recovers
+    assert store.get(key) is not None
+
+
+# ---------------------------------------------------------------------------
+# concurrency: racing writers, readers mid-race
+# ---------------------------------------------------------------------------
+def test_racing_same_key_writers_leave_one_intact_entry(problem, tmp_path):
+    _, csr = problem
+    root = str(tmp_path)
+    key = PlanStore(root).key_for(csr)
+    errors = []
+
+    def writer(fmt):
+        store = PlanStore(root)       # each thread: its own handle
+        try:
+            for _ in range(30):
+                store.put(key, make_plan(csr, fmt=fmt))
+        except Exception as e:        # pragma: no cover - the assertion
+            errors.append(e)
+
+    ts = [threading.Thread(target=writer, args=(f,))
+          for f in ("ell_row", "coo_row")]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert errors == []
+    final = PlanStore(root).get(key)
+    assert final is not None and final.fmt in ("ell_row", "coo_row")
+    assert PlanStore(root).stats()["quarantined"] == 0
+
+
+def test_reader_never_sees_torn_json_mid_race(problem, tmp_path):
+    _, csr = problem
+    root = str(tmp_path)
+    key = PlanStore(root).key_for(csr)
+    PlanStore(root).put(key, make_plan(csr))      # ensure first read hits
+    stop = threading.Event()
+    tears = []
+
+    def reader():
+        store = PlanStore(root)
+        while not stop.is_set():
+            plan = store.get(key)
+            if plan is None:          # a torn write would quarantine
+                tears.append("miss")
+
+    def writer():
+        store = PlanStore(root)
+        for i in range(60):
+            store.put(key, make_plan(csr, fmt="ell_row" if i % 2
+                                      else "coo_row"))
+
+    rt = threading.Thread(target=reader)
+    rt.start()
+    writer()
+    stop.set()
+    rt.join()
+    assert tears == []
+    assert PlanStore(root).stats()["quarantined"] == 0
+
+
+# ---------------------------------------------------------------------------
+# planner + service integration
+# ---------------------------------------------------------------------------
+def test_planner_plan_or_load_round_trips(problem, tmp_path):
+    _, csr = problem
+    store = PlanStore(str(tmp_path))
+    planner = Planner()
+    p1 = planner.plan_or_load(csr, store)
+    assert store.stats()["writes"] == 1
+    p2 = planner.plan_or_load(csr, store)
+    assert store.stats()["hits"] == 1
+    assert p2.to_dict() == p1.to_dict()
+
+
+def test_second_service_registers_with_zero_tuner_invocations(problem,
+                                                              tmp_path):
+    _, csr = problem
+    root = str(tmp_path / "fleet")
+
+    def service(timer):
+        db = TuningDB(machine="svc", c=1.0, records=[], d_star={})
+        return SpMVService(
+            tuner=KernelTuner(db=db, timer=timer, interpret=True),
+            plan_store=PlanStore(root), max_batch=4)
+
+    t1 = fake_timer()
+    svc1 = service(t1)
+    e1 = svc1.register("a", csr, measure_baseline=False)
+    assert len(t1.calls) > 0 and not e1.from_plan
+    assert svc1.plan_store.stats()["writes"] == 1
+
+    # "another replica": fresh service, fresh tuner, same store directory
+    t2 = fake_timer()
+    svc2 = service(t2)
+    e2 = svc2.register("whatever", csr, measure_baseline=False)
+    assert e2.from_plan
+    assert len(t2.calls) == 0, "plan-store hit must skip tuning entirely"
+    assert svc2.plan_store.stats()["hits"] == 1
+    assert e2.matrix.formats == e1.matrix.formats
+    assert "plan_store" in svc2.stats()
+
+
+def test_service_survives_corrupted_store_entry(problem, rng, tmp_path,
+                                                tel):
+    dense, csr = problem
+    root = str(tmp_path / "fleet")
+    svc1 = SpMVService(plan_store=PlanStore(root))
+    svc1.register("a", csr, measure_baseline=False)
+    store = PlanStore(root)
+    key = store.keys()[0]
+    corrupt_file(store, key, "garbage{{{")
+
+    # never raises: the corrupt entry quarantines, the service re-tunes
+    svc2 = SpMVService(plan_store=PlanStore(root))
+    e2 = svc2.register("b", csr, measure_baseline=False)
+    assert not e2.from_plan
+    assert svc2.plan_store.stats()["quarantined"] == 1
+    x = rng.normal(size=140).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(svc2.spmv("b", x)), dense @ x,
+                               rtol=2e-4, atol=2e-4)
+    events = [e for e in tel.sinks[0].named("store.quarantine")
+              if e["type"] == "event"]
+    assert events
+    # the re-tuned plan was written back over the quarantined slot
+    assert PlanStore(root).get(key) is not None
+
+
+def test_store_full_disk_does_not_fail_registration(problem, monkeypatch,
+                                                    tmp_path, tel):
+    _, csr = problem
+    store = PlanStore(str(tmp_path))
+
+    def full_disk(key, plan):
+        raise OSError(28, "No space left on device")
+
+    monkeypatch.setattr(store, "put", full_disk)
+    svc = SpMVService(plan_store=store)
+    entry = svc.register("a", csr, measure_baseline=False)
+    assert entry is not None           # registration served from memory
+    swallowed = [k for k in tel.snapshot()["counters"]
+                 if k.startswith("service.swallowed_errors")
+                 and "plan_store_put" in k]
+    assert swallowed

@@ -1,0 +1,30 @@
+"""``repro.analyze`` — static analysis for plans, registries, and source.
+
+Three passes behind one CLI (``python -m repro.analyze``), all jax-free
+and stdlib-only so they run before any launch and inside a bare CI job:
+
+* :mod:`.planlint` — lint ``ExecutionPlan`` / ``ShardedPlan`` JSON
+  (rules ``RPL0xx``): schema, geometry alignment, slab bounds, a VMEM
+  footprint model, SELL bucket tables, hybrid/sharded partitions.
+  Wired into :class:`~repro.core.plan_store.PlanStore` loads (errors
+  quarantine with reason ``"lint"``), ``SpMVService.register
+  (strict_lint=)``, and the ``Planner``'s self-check.
+* :mod:`.registry` — audit the dispatch registry against the transform
+  table, the tuner grid, and the documented telemetry vocabulary
+  (``RPR0xx``).
+* :mod:`.astlint` — repo-contract source lint (``RPA0xx``) with
+  ``# repro: noqa[RPAxxx]`` waivers.
+
+The rule catalog lives in ``docs/analysis.md``.
+"""
+from .astlint import lint_paths, lint_source
+from .findings import ERROR, WARN, Finding, PlanLintError, errors, \
+    has_errors, render
+from .planlint import DEFAULT_VMEM_BUDGET, lint_envelope, lint_plan, \
+    lint_text
+from .registry import audit
+
+__all__ = ["ERROR", "WARN", "Finding", "PlanLintError", "errors",
+           "has_errors", "render", "DEFAULT_VMEM_BUDGET", "lint_plan",
+           "lint_envelope", "lint_text", "audit", "lint_source",
+           "lint_paths"]

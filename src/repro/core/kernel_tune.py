@@ -41,8 +41,8 @@ from . import dispatch as _dispatch
 from .formats import CCS, CSR, MatrixStats
 
 __all__ = [
-    "TileGeometry", "GeometryRecord", "candidate_geometries",
-    "nearest_geometry", "KernelTuner",
+    "TileGeometry", "GeometryRecord", "GRID_FORMATS",
+    "candidate_geometries", "nearest_geometry", "KernelTuner",
 ]
 
 
@@ -168,6 +168,14 @@ BCSR_NNZ_TILES = (128, 512, 2048)
 MAX_SLAB = 262144
 MAX_BLOCK_SLAB = 8192
 
+#: every format with a bounded candidate grid below — the kernel tier's
+#: tunable surface.  Kept as a plain literal tuple so the static registry
+#: audit (``repro.analyze``) can read it without importing jax; the
+#: ``candidate_geometries`` gate uses it, so a kernel registered without a
+#: grid entry is caught both here and by the audit.
+GRID_FORMATS = ("ell_row", "ell_col", "sell", "coo_row", "coo_col",
+                "csr", "ccs", "bcsr")
+
 
 def _align8(n: int) -> int:
     return max(8, 8 * ((int(n) + 7) // 8))
@@ -190,6 +198,8 @@ def candidate_geometries(fmt: str, op: str = "spmv", *, n_rows: int = 0,
     Candidates are pre-clamped to the matrix profile (a 512-row tile on a
     100-row matrix is the same launch as a 128-row one) and de-duplicated,
     so the tuner never times the same effective launch twice."""
+    if fmt not in GRID_FORMATS:
+        return []
     ks = tuple(sorted({min(k, _align8(batch)) for k in K_TILES})) \
         if op == "spmm" else (None,)
     geoms: List[TileGeometry] = []

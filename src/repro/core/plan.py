@@ -56,7 +56,7 @@ import repro.obs as _obs
 from . import dispatch as _dispatch
 from .autotune import (MachineModel, TuningDB, decide_cost_model,
                        decide_generalized, decide_paper)
-from .formats import CSR, MatrixStats, memory_bytes
+from .formats import CSR, MatrixStats, memory_bytes, validate_container
 from .kernel_tune import KernelTuner, TileGeometry, _structure_sig
 
 SCHEMA_VERSION = 1
@@ -435,6 +435,9 @@ class ExecutionPlan:
         cache = self.__dict__.pop("_mat_cache", None)
         matrix = (cache[1] if cache is not None and cache[0] is csr
                   else self.transform.apply(csr))
+        # check the *transformed* container too: a buggy or bit-rotted
+        # transform fails here, not as garbage indices inside a kernel
+        validate_container(matrix)
         d_mat_new: Optional[float] = None  # computed once, only if needed
         overrides = {"spmv": impls or {}, "spmm": spmm_impls or {}}
         fns: Dict[str, Callable] = {}
@@ -493,6 +496,8 @@ class ExecutionPlan:
                 csr, db=db, batch=self.batch,
                 expected_iterations=self.expected_iterations,
                 **self.transform.params)
+        for blk in hyb.blocks:
+            validate_container(blk)
         tunings = self.tunings_by_format()
         if not matched:
             tunings = {op: {f: g.without_slab_bound()
@@ -856,7 +861,8 @@ class Planner:
                  tuner: Optional[KernelTuner] = None,
                  policy: Optional[Any] = None,
                  rule: str = "auto", tier: str = "auto",
-                 strategy: str = "variance"):
+                 strategy: str = "variance", lint: bool = True,
+                 lint_vmem_budget: Optional[int] = None):
         self.db = db
         self.model = model
         self.tuner = tuner
@@ -864,6 +870,36 @@ class Planner:
         self.rule = rule
         self.tier = tier
         self.strategy = strategy
+        self.lint = lint
+        self.lint_vmem_budget = lint_vmem_budget
+
+    def _self_check(self, plan):
+        """Run the static plan lint (``repro.analyze.planlint``) on every
+        plan this planner mints — the artifact contract is enforced at
+        the mint, not only on replay.  Lint errors are a planner bug, so
+        they raise :class:`PlanError`; warnings only count/emit
+        telemetry.  Disable with ``Planner(lint=False)``."""
+        if not self.lint:
+            return plan
+        from repro.analyze.planlint import lint_plan as _lint_plan
+        findings = _lint_plan(plan.to_dict(),
+                              vmem_budget=self.lint_vmem_budget)
+        if findings:
+            errs = [f for f in findings if f.severity == "error"]
+            tel = _obs.get()
+            if tel.enabled:
+                for f in findings:
+                    tel.counter("plan.lint", rule=f.rule,
+                                severity=f.severity).inc()
+                tel.event("plan.lint", errors=len(errs),
+                          warnings=len(findings) - len(errs),
+                          first=findings[0].render())
+            if errs:
+                raise PlanError(
+                    "planner self-check failed — the minted plan does "
+                    "not satisfy the artifact contract:\n"
+                    + "\n".join(f.render() for f in errs))
+        return plan
 
     # -- decision ------------------------------------------------------------
     def _resolve_rule(self, rule: Optional[str]) -> str:
@@ -930,9 +966,10 @@ class Planner:
                       nnz=stats.nnz, d_mat=stats.d_mat) as plan_span:
             if partition is not None:
                 plan_span.set(fmt="hybrid")
-                return self._plan_hybrid(csr, stats, rule_used, batch, k,
-                                         tier_used, strategy=partition,
-                                         formats=formats, **partition_kw)
+                return self._self_check(
+                    self._plan_hybrid(csr, stats, rule_used, batch, k,
+                                      tier_used, strategy=partition,
+                                      formats=formats, **partition_kw))
             if fmt is not None:
                 chosen, rule_used = fmt, "fixed"
                 d_star, gain = float("nan"), 0.0
@@ -950,9 +987,10 @@ class Planner:
                 d_star, gain = decision.d_star, decision.expected_gain
             plan_span.set(fmt=chosen)
             if chosen == "hybrid":
-                return self._plan_hybrid(csr, stats, rule_used, batch, k,
-                                         tier_used, strategy=self.strategy,
-                                         formats=formats, **partition_kw)
+                return self._self_check(
+                    self._plan_hybrid(csr, stats, rule_used, batch, k,
+                                      tier_used, strategy=self.strategy,
+                                      formats=formats, **partition_kw))
             if partition_kw:
                 # build_hybrid would raise on unknown kwargs; the leaf path
                 # must not silently swallow them instead
@@ -972,7 +1010,7 @@ class Planner:
                 d_mat=stats.d_mat, d_star=d_star, expected_gain=gain)
             if tier_used == "kernel":
                 plan.geometry = self._tune_leaf(csr, stats, plan)
-            return plan
+            return self._self_check(plan)
 
     def build(self, csr: CSR, **plan_kw) -> PlannedMatrix:
         """``plan(csr) .bind(csr)`` in one call."""
@@ -1026,11 +1064,11 @@ class Planner:
                 tel.gauge("sharded.load_imbalance").set(imbalance)
                 sp.set(imbalance=imbalance)
             stats = MatrixStats.of(csr)
-            return ShardedPlan(
+            return self._self_check(ShardedPlan(
                 shards=shards, axis=axis, strategy=strategy,
                 params=strategy_kw, mesh_shape=(n_shards,), batch=batch,
                 fingerprint=PlanFingerprint.from_stats(
-                    stats, _structure_sig(csr)))
+                    stats, _structure_sig(csr))))
 
     def build_sharded(self, csr: CSR, **kw) -> Any:
         """``plan_sharded(csr) .bind(csr)`` in one call."""

@@ -234,12 +234,20 @@ class PlanStore:
             return self._quarantine(key, path, "checksum")
         try:
             if payload.get("kind") == "sharded_plan":
-                return ShardedPlan.from_dict(payload)
-            return ExecutionPlan.from_dict(payload)
+                plan = ShardedPlan.from_dict(payload)
+            else:
+                plan = ExecutionPlan.from_dict(payload)
         except PlanError:
             # PlanSchemaError included: written by a different plan
             # schema — stale, not servable by this build
             return self._quarantine(key, path, "schema")
+        # schema-valid but semantically infeasible (misaligned geometry,
+        # broken partition, over-budget tile): the static plan lint —
+        # jax-free, so a store sweep never pays a backend import
+        from repro.analyze.planlint import lint_plan as _lint_plan
+        if any(f.severity == "error" for f in _lint_plan(payload)):
+            return self._quarantine(key, path, "lint")
+        return plan
 
     def _quarantine(self, key: str, path: str, reason: str) -> None:
         """Move a bad entry aside (never delete — forensics) and report.

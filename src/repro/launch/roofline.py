@@ -293,8 +293,8 @@ def from_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
                 getattr(mem, "argument_size_in_bytes", 0) +
                 getattr(mem, "output_size_in_bytes", 0) -
                 getattr(mem, "alias_size_in_bytes", 0))
-    except Exception:
-        peak = 0
+    except (AttributeError, TypeError, RuntimeError, ValueError):
+        peak = 0                   # memory_analysis is best-effort per backend
     r = Roofline(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
                  hlo_flops=max(w.dot_flops, flops_body),
                  hlo_bytes=byts,

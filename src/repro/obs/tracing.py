@@ -33,14 +33,14 @@ def as_jsonable(v: Any) -> Any:
     if callable(item) and not getattr(v, "shape", None):
         try:
             return item()          # numpy / jax scalar
-        except Exception:
-            pass
+        except (TypeError, ValueError):
+            pass                   # .item() that isn't the numpy protocol
     to_dict = getattr(v, "to_dict", None)
     if callable(to_dict):
         try:
             return as_jsonable(to_dict())
-        except Exception:
-            pass
+        except (TypeError, ValueError, KeyError, AttributeError):
+            pass                   # fall through to the repr() fallback
     if isinstance(v, dict):
         return {str(k): as_jsonable(x) for k, x in v.items()}
     if isinstance(v, (list, tuple, set, frozenset)):

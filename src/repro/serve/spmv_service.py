@@ -62,6 +62,8 @@ import jax
 import jax.numpy as jnp
 
 import repro.obs as _obs
+from repro.analyze.findings import PlanLintError
+from repro.analyze.planlint import lint_plan as _lint_plan
 from repro.core import dispatch as _dispatch
 from repro.core.autotune import MachineModel, TuningDB, time_fn
 from repro.core.formats import CSR, memory_bytes
@@ -301,9 +303,38 @@ class SpMVService:
             clock=self._now) for op in ("spmv", "spmm")}
 
     # -- registration --------------------------------------------------------
+    def _lint_registered_plan(self, key: str, plan: Any,
+                              strict: bool) -> Any:
+        """Static lint of a caller-supplied plan before it is bound.
+
+        A plan that fails lint (misaligned geometry, broken partition,
+        over-budget tile — see ``docs/analysis.md``) is refused with a
+        typed :class:`~repro.analyze.findings.PlanLintError` under
+        ``strict``; otherwise it is dropped (counted, evented) and
+        registration proceeds as if no plan was supplied, rebuilding
+        fresh.  The lint is jax-free and runs on ``plan.to_dict()``."""
+        if plan is None:
+            return None
+        errs = [f for f in _lint_plan(plan.to_dict()) if f.severity == "error"]
+        if not errs:
+            return plan
+        tel = _obs.get()
+        if tel.enabled:
+            tel.counter("service.plan_lint", key=key, strict=strict).inc()
+            tel.event("service.plan_lint", key=key, strict=strict,
+                      errors=[f.render() for f in errs])
+        err = PlanLintError(
+            f"plan for {key!r} failed lint with {len(errs)} error(s):\n"
+            + "\n".join(f.render() for f in errs), errs)
+        if strict:
+            raise err
+        _swallow("plan_lint", err)
+        return None
+
     def register(self, key: str, csr: CSR, expected_iterations: int = 100,
                  measure_baseline: bool = True, batch: int = 1,
                  plan: Optional[ExecutionPlan] = None,
+                 strict_lint: bool = False,
                  **build_kw) -> MatrixEntry:
         """Build the per-block-tuned operator for ``csr`` under ``key``.
 
@@ -334,6 +365,15 @@ class SpMVService:
         Plans carrying ``batch > 1`` seed this key's micro-batch panel
         width (``entry.max_batch``) instead of the service default.
 
+        Every supplied plan is statically linted first
+        (:mod:`repro.analyze.planlint`).  ``strict_lint=True`` turns lint
+        errors into a raised
+        :class:`~repro.analyze.findings.PlanLintError`; by default a
+        lint-failing plan is dropped (counted under ``service.plan_lint``)
+        and registration rebuilds from scratch — note that a non-strict
+        *sharded* plan failing lint therefore degrades to a single-device
+        build.
+
         Without a supplied plan, a fingerprint-keyed plan cache is
         consulted first — and behind it the persistent ``plan_store``
         (shared across processes): re-registering a matrix whose structure
@@ -343,6 +383,7 @@ class SpMVService:
         ``stats()['plan_store']``."""
         csr.validate()       # malformed input fails here, typed, not as
         #                      garbage inside a kernel (MatrixValidationError)
+        plan = self._lint_registered_plan(key, plan, strict_lint)
         if isinstance(plan, ShardedPlan):
             return self._register_sharded(
                 key, csr, plan, expected_iterations=expected_iterations,

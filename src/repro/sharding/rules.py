@@ -244,8 +244,8 @@ def _current_mesh() -> Optional[Mesh]:
         from jax._src import mesh as mesh_lib
         m = mesh_lib.thread_resources.env.physical_mesh
         return m if m is not None and not m.empty else None
-    except Exception:
-        return None
+    except (ImportError, AttributeError):
+        return None                # private-API probe; jax moved it
 
 
 __all__ = [

@@ -157,6 +157,8 @@ def run_with_restarts(trainer: Trainer, max_restarts: int = 3,
                 raise
             try:
                 trainer.ckpt.wait()
+            # the restart path must survive whatever state the failed
+            # step left in the checkpointer — repro: noqa[RPA001]
             except Exception:
                 pass
             state = trainer.try_restore() or trainer.init_state()

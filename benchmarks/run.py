@@ -23,7 +23,7 @@ from .common import print_rows
 
 SECTIONS = ("table1", "fig56", "fig7", "fig8", "hybrid", "spmm_batch",
             "dstar", "moe", "kernels", "roofline", "obs", "guard",
-            "sharded")
+            "sharded", "stream")
 
 QUICK_SCALE = 0.02
 
@@ -91,7 +91,7 @@ def main() -> None:
 
     from . import (fig56_speedup, fig7_overhead, fig8_graph, hybrid_blocks,
                    kernels_bench, moe_dispatch, obs_overhead, roofline,
-                   sharded_spmv, spmm_batch, table1)
+                   sharded_spmv, spmm_batch, stream_updates, table1)
     scale_kw = {"scale": scale} if scale is not None else {}
     section("table1", table1.run, **scale_kw)
     section("fig56", fig56_speedup.run, **scale_kw)
@@ -104,6 +104,7 @@ def main() -> None:
     section("kernels", kernels_bench.run)
     section("roofline", roofline.run)
     section("obs", obs_overhead.run, **scale_kw)
+    section("stream", stream_updates.run, **scale_kw)
     section("guard", obs_overhead.run_guard, **scale_kw)
     # runs in a subprocess under 8 forced host devices (the parent's jax
     # has already locked its device count)

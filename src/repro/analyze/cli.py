@@ -41,13 +41,16 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     sub = parser.add_subparsers(dest="cmd")
 
     p_plan = sub.add_parser("lint-plan",
-                            help="lint ExecutionPlan/ShardedPlan JSON "
-                                 "(bare payloads or store envelopes)")
+                            help="lint ExecutionPlan/ShardedPlan/"
+                                 "stream-artifact JSON (bare payloads "
+                                 "or store envelopes)")
     p_plan.add_argument("paths", nargs="+", metavar="plan.json")
     p_plan.add_argument("--vmem-budget", type=float, default=None,
                         metavar="MIB",
-                        help="VMEM budget for RPL004 in MiB "
-                             "(default 16)")
+                        help="VMEM budget for RPL004 in MiB (default: "
+                             "queried from the running backend when jax "
+                             "is importable — 16 on CPU/GPU/unknown, 128 "
+                             "on TPU v4+ — and 16 in jax-free runs)")
 
     p_audit = sub.add_parser("audit",
                              help="cross-registry + telemetry-vocabulary "

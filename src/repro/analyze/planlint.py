@@ -36,25 +36,65 @@ Rule catalog (docs/analysis.md):
           mesh shape
   RPL008  transform recipe: name matches fmt, param types
   RPL009  fingerprint self-consistency (mu ~ nnz/n, d_mat ~ sigma/mu)
+  RPL010  streaming artifacts (repro.stream): DeltaBatch JSON bounds
+          and stream_plan envelopes (nested plan lint, policy ranges,
+          sketch consistency)
 """
 from __future__ import annotations
 
 import hashlib
 import json
+import sys
 from typing import Any, Dict, List, Optional
 
 from .findings import ERROR, WARN, Finding
 
 #: default ceiling for the geometry-driven VMEM working set (RPL004).
-#: Real TPU cores have ~16 MiB of VMEM; the model below deliberately
+#: Most TPU cores have ~16 MiB of VMEM; the model below deliberately
 #: counts only the knob-driven tiles (see docs/analysis.md), so a plan
 #: over this budget cannot fit regardless of the matrix it binds.
 DEFAULT_VMEM_BUDGET = 16 * 2 ** 20
+
+#: VMEM ceiling for TPU generations with larger on-chip provisioning
+#: (v4 and later parts); only used when the running process can prove
+#: it is on one (see :func:`default_vmem_budget`)
+LARGE_VMEM_BUDGET = 128 * 2 ** 20
+
+
+def default_vmem_budget() -> int:
+    """The RPL004 budget for *this* process's backend.
+
+    This module must stay importable (and linting) without jax — the CLI
+    and ``PlanStore`` sweeps run jax-free — so jax is never imported
+    here; it is only *queried* when something else already imported it
+    (``sys.modules``).  Without jax, or on cpu/gpu backends, or on any
+    TPU generation this heuristic does not recognize, the conservative
+    16 MiB core budget applies; known v4+ TPU device kinds get the
+    larger provisioning.  ``lint_plan(vmem_budget=...)`` always wins
+    over this default."""
+    jax_mod = sys.modules.get("jax")
+    if jax_mod is None:
+        return DEFAULT_VMEM_BUDGET
+    try:
+        dev = jax_mod.devices()[0]
+        if getattr(dev, "platform", "") != "tpu":
+            return DEFAULT_VMEM_BUDGET
+        kind = str(getattr(dev, "device_kind", "")).lower()
+    except (RuntimeError, IndexError, AttributeError, ValueError):
+        # backend init failure must read as "unknown", not crash a lint
+        return DEFAULT_VMEM_BUDGET
+    if any(gen in kind for gen in ("v4", "v5", "v6", "v7")):
+        return LARGE_VMEM_BUDGET
+    return DEFAULT_VMEM_BUDGET
 
 #: mirrors core.plan.SCHEMA_VERSION / SHARDED_SCHEMA_VERSION (the
 #: registry audit's job is to notice if these ever drift)
 SCHEMA_VERSION = 1
 SHARDED_SCHEMA_VERSION = 1
+#: mirrors stream.delta.DELTA_SCHEMA_VERSION /
+#: stream.drift.STREAM_PLAN_SCHEMA_VERSION (same drift discipline)
+DELTA_SCHEMA_VERSION = 1
+STREAM_PLAN_SCHEMA_VERSION = 1
 
 KNOWN_FORMATS = ("csr", "ccs", "coo_row", "coo_col", "ell_row", "ell_col",
                  "sell", "bcsr", "hybrid")
@@ -584,6 +624,190 @@ class _Lint:
                          f"shard fingerprints sum to nnz={nnz_sum} but "
                          f"the plan's fingerprint has nnz={fp['nnz']}")
 
+    # -- streaming artifacts (RPL010) ------------------------------------------
+    def _int_list(self, v: Any, where: str, what: str,
+                  upper: Optional[int] = None) -> Optional[int]:
+        """Check a JSON list of non-negative ints (optionally bounded
+        above); returns its length, or None when unusable."""
+        if not isinstance(v, list):
+            self.err("RPL010", where, f"{what} must be a list; got "
+                                      f"{type(v).__name__}")
+            return None
+        for i, x in enumerate(v):
+            if not _is_int(x) or x < 0:
+                self.err("RPL010", f"{where}[{i}]",
+                         f"{what} entries must be non-negative integers; "
+                         f"got {x!r}")
+                return None
+            if upper is not None and x >= upper:
+                self.err("RPL010", f"{where}[{i}]",
+                         f"{what} index {x} out of range [0, {upper})")
+                return None
+        return len(v)
+
+    def delta_batch(self, d: Dict[str, Any], where: str) -> None:
+        """A serialized :class:`~repro.stream.delta.DeltaBatch`: the
+        bounds that make ``apply_delta`` safe, checkable from JSON."""
+        known = {"kind", "schema_version", "n_cols", "appends", "updates",
+                 "deletes"}
+        for k in d:
+            if k not in known:
+                self.warn("RPL001", f"{where}{k}", "unknown delta field")
+        if d.get("schema_version") != DELTA_SCHEMA_VERSION:
+            self.err("RPL010", f"{where}schema_version",
+                     f"unsupported delta schema_version="
+                     f"{d.get('schema_version')!r}; this linter reads "
+                     f"version {DELTA_SCHEMA_VERSION}")
+        n_cols = d.get("n_cols")
+        if not _is_int(n_cols) or n_cols < 1:
+            self.err("RPL010", f"{where}n_cols",
+                     f"n_cols={n_cols!r} must be a positive integer")
+            n_cols = None
+        appends = d.get("appends", [])
+        if not isinstance(appends, list):
+            self.err("RPL010", f"{where}appends",
+                     f"appends must be a list; got "
+                     f"{type(appends).__name__}")
+        else:
+            for i, pair in enumerate(appends):
+                w = f"{where}appends[{i}]"
+                if not isinstance(pair, (list, tuple)) or len(pair) != 2:
+                    self.err("RPL010", w, "append entries must be "
+                                          "[cols, vals] pairs")
+                    continue
+                cols, vals = pair
+                nc = self._int_list(cols, f"{w}.cols", "append cols",
+                                    upper=n_cols)
+                if not isinstance(vals, list):
+                    self.err("RPL010", f"{w}.vals",
+                             f"append vals must be a list; got "
+                             f"{type(vals).__name__}")
+                elif not all(_is_num(v) for v in vals):
+                    self.err("RPL010", f"{w}.vals",
+                             "append vals must be numbers")
+                elif nc is not None and len(vals) != nc:
+                    self.err("RPL010", w,
+                             f"append row has {nc} cols but "
+                             f"{len(vals)} vals")
+        for section, fields in (("updates", ("rows", "cols", "vals")),
+                                ("deletes", ("rows", "cols"))):
+            sec = d.get(section, {})
+            w = f"{where}{section}"
+            if not isinstance(sec, dict):
+                self.err("RPL010", w, f"{section} must be an object; got "
+                                      f"{type(sec).__name__}")
+                continue
+            lens = {}
+            for f in fields:
+                v = sec.get(f, [])
+                if f == "vals":
+                    if not isinstance(v, list) \
+                            or not all(_is_num(x) for x in v):
+                        self.err("RPL010", f"{w}.{f}",
+                                 f"{section}.{f} must be a list of "
+                                 f"numbers")
+                        continue
+                    lens[f] = len(v)
+                else:
+                    n = self._int_list(v, f"{w}.{f}", f"{section}.{f}",
+                                       upper=(n_cols if f == "cols"
+                                              else None))
+                    if n is not None:
+                        lens[f] = n
+            if len(set(lens.values())) > 1:
+                self.err("RPL010", w,
+                         f"{section} coordinate lists disagree on "
+                         f"length: { {f: n for f, n in lens.items()} }")
+
+    def stream_plan(self, d: Dict[str, Any], where: str) -> None:
+        """A ``stream_plan`` artifact
+        (:meth:`~repro.stream.drift.StreamingPlannedMatrix.to_dict`): the
+        wrapped ExecutionPlan gets the full RPL001–RPL009 pass, plus the
+        drift-policy and sketch ranges the re-plan trigger relies on."""
+        known = {"kind", "schema_version", "key", "plan", "sketch",
+                 "policy", "counters"}
+        for k in d:
+            if k not in known:
+                self.warn("RPL001", f"{where}{k}", "unknown stream_plan "
+                                                   "field")
+        if d.get("schema_version") != STREAM_PLAN_SCHEMA_VERSION:
+            self.err("RPL010", f"{where}schema_version",
+                     f"unsupported stream_plan schema_version="
+                     f"{d.get('schema_version')!r}; this linter reads "
+                     f"version {STREAM_PLAN_SCHEMA_VERSION}")
+        plan = d.get("plan")
+        if not isinstance(plan, dict):
+            self.err("RPL010", f"{where}plan",
+                     "stream_plan must embed its ExecutionPlan object")
+        else:
+            self.exec_plan(plan, f"{where}plan.")
+        sketch = d.get("sketch")
+        fp_n = None
+        if not isinstance(sketch, dict):
+            self.err("RPL010", f"{where}sketch",
+                     "stream_plan must embed its drift sketch")
+        else:
+            for f in ("n", "nnz", "updates"):
+                if not _is_int(sketch.get(f)) or sketch[f] < 0:
+                    self.err("RPL010", f"{where}sketch.{f}",
+                             f"sketch.{f} must be a non-negative "
+                             f"integer; got {sketch.get(f)!r}")
+            if not _is_num(sketch.get("sum_sq")) \
+                    or sketch["sum_sq"] < 0:
+                self.err("RPL010", f"{where}sketch.sum_sq",
+                         f"sketch.sum_sq must be a non-negative number; "
+                         f"got {sketch.get('sum_sq')!r}")
+            hist_n = self._int_list(sketch.get("hist", []),
+                                    f"{where}sketch.hist", "sketch.hist")
+            if hist_n is not None and _is_int(sketch.get("n")):
+                total = sum(sketch["hist"])
+                if total != sketch["n"]:
+                    self.err("RPL010", f"{where}sketch.hist",
+                             f"row-length histogram sums to {total} but "
+                             f"the sketch tracks n={sketch['n']} rows")
+                fp_n = sketch["n"]
+        if isinstance(plan, dict) and fp_n is not None:
+            pf = plan.get("fingerprint")
+            if isinstance(pf, dict) and _is_int(pf.get("n")) \
+                    and pf["n"] != fp_n:
+                self.warn("RPL010", f"{where}sketch",
+                          f"sketch tracks n={fp_n} rows but the embedded "
+                          f"plan was minted on n={pf['n']} — deltas have "
+                          f"outgrown the plan (expected between re-plans)")
+        policy = d.get("policy")
+        if isinstance(policy, dict):
+            hyst = policy.get("hysteresis")
+            if not _is_num(hyst) or not (0.0 <= hyst < 1.0):
+                self.err("RPL010", f"{where}policy.hysteresis",
+                         f"hysteresis={hyst!r} must be a number in "
+                         f"[0, 1) — at 1 the dead-band swallows the "
+                         f"whole boundary")
+            for f in ("retransform_factor", "k_hat"):
+                v = policy.get(f)
+                if v is not None and (not _is_num(v) or v < 0):
+                    self.err("RPL010", f"{where}policy.{f}",
+                             f"{f}={v!r} must be a non-negative number")
+            b = policy.get("batch")
+            if b is not None and (not _is_int(b) or b < 1):
+                self.err("RPL010", f"{where}policy.batch",
+                         f"batch={b!r} must be a positive integer")
+            mdb = policy.get("min_deltas_between")
+            if mdb is not None and (not _is_int(mdb) or mdb < 0):
+                self.err("RPL010", f"{where}policy.min_deltas_between",
+                         f"min_deltas_between={mdb!r} must be a "
+                         f"non-negative integer")
+        elif policy is not None:
+            self.err("RPL010", f"{where}policy",
+                     f"policy must be an object; got "
+                     f"{type(policy).__name__}")
+        counters = d.get("counters")
+        if isinstance(counters, dict):
+            for f, v in counters.items():
+                if not _is_int(v) or v < 0:
+                    self.err("RPL010", f"{where}counters.{f}",
+                             f"counter {f}={v!r} must be a non-negative "
+                             f"integer")
+
 
 def _params_of(d: Dict[str, Any]) -> Dict[str, Any]:
     t = d.get("transform")
@@ -650,16 +874,24 @@ def _footprint(gd: Dict[str, Any], fmt: str, op: str,
 # ---------------------------------------------------------------------------
 def lint_plan(payload: Any,
               vmem_budget: Optional[int] = None) -> List[Finding]:
-    """Lint a plan payload dict (ExecutionPlan or ShardedPlan — routed on
-    ``kind``).  Returns findings; empty means clean."""
+    """Lint a plan payload dict — ExecutionPlan, ShardedPlan, or a
+    streaming artifact (``delta_batch`` / ``stream_plan``), routed on
+    ``kind``.  Returns findings; empty means clean.  ``vmem_budget``
+    defaults to :func:`default_vmem_budget` — the running backend's
+    provisioning when knowable, 16 MiB otherwise."""
     lint = _Lint(vmem_budget if vmem_budget is not None
-                 else DEFAULT_VMEM_BUDGET)
+                 else default_vmem_budget())
     if not isinstance(payload, dict):
         lint.err("RPL001", "plan", f"plan payload must be a JSON object; "
                                    f"got {type(payload).__name__}")
         return lint.findings
-    if payload.get("kind") == "sharded_plan":
+    kind = payload.get("kind")
+    if kind == "sharded_plan":
         lint.sharded(payload, "")
+    elif kind == "delta_batch":
+        lint.delta_batch(payload, "")
+    elif kind == "stream_plan":
+        lint.stream_plan(payload, "")
     else:
         lint.exec_plan(payload, "")
     return lint.findings
@@ -704,6 +936,7 @@ def lint_text(text: str,
     return lint_plan(obj, vmem_budget=vmem_budget)
 
 
-__all__ = ["DEFAULT_VMEM_BUDGET", "KNOWN_FORMATS", "KNOWN_OPS",
-           "KNOWN_TIERS", "GEOM_KNOBS", "lint_plan", "lint_envelope",
+__all__ = ["DEFAULT_VMEM_BUDGET", "LARGE_VMEM_BUDGET", "KNOWN_FORMATS",
+           "KNOWN_OPS", "KNOWN_TIERS", "GEOM_KNOBS",
+           "default_vmem_budget", "lint_plan", "lint_envelope",
            "lint_text"]

@@ -21,6 +21,11 @@ Durability contract (what "crash-safe" means here):
   a reason suffix) and reported through ``repro.obs``; ``get`` returns
   ``None`` and the caller re-tunes.  A broken store entry can cost one
   re-tune; it must never take a replica down.
+* **Bounded growth** — with ``max_entries`` set, every ``put`` finishes
+  with an LRU sweep (recency = file mtime, refreshed on every hit) that
+  unlinks the coldest entries down to the cap and counts them under
+  ``store.evict``.  Unbounded by default: a shared fleet store is usually
+  curated by capacity, not time.
 
 On-disk layout (see ``docs/robustness.md``)::
 
@@ -91,8 +96,13 @@ class PlanStore:
     planning.
     """
 
-    def __init__(self, root: str, create: bool = True):
+    def __init__(self, root: str, create: bool = True,
+                 max_entries: Optional[int] = None):
+        if max_entries is not None and int(max_entries) < 1:
+            raise ValueError(
+                f"max_entries must be >= 1 or None; got {max_entries}")
         self.root = str(root)
+        self.max_entries = None if max_entries is None else int(max_entries)
         if create:
             os.makedirs(self.root, exist_ok=True)
         self._lock = threading.Lock()
@@ -100,6 +110,7 @@ class PlanStore:
         self.misses = 0
         self.writes = 0
         self.quarantined = 0
+        self.evictions = 0
 
     # -- keys + paths --------------------------------------------------------
     def key_for(self, csr_or_fp: Any, **knobs: Any) -> str:
@@ -164,7 +175,49 @@ class PlanStore:
             with open(path, "r+") as f:
                 f.seek(0)
                 f.write('{"store_version": 1, "sha256": "corrupted')
+        if self.max_entries is not None:
+            self._evict(keep=path)
         return path
+
+    def _evict(self, keep: Optional[str] = None) -> int:
+        """LRU-by-mtime sweep down to ``max_entries``: hits refresh an
+        entry's mtime, so the entries deleted first are the ones no
+        replica has read or written recently.  ``keep`` (the just-written
+        path) is never evicted even if a clock oddity makes it look old.
+        Unlinked, not quarantined — eviction is capacity policy, not
+        corruption forensics.  Returns the number of entries removed."""
+        try:
+            names = [n for n in os.listdir(self.root) if n.endswith(".json")]
+        except OSError:
+            return 0
+        aged = []
+        for n in names:
+            p = os.path.join(self.root, n)
+            try:
+                aged.append((os.path.getmtime(p), p))
+            except OSError:
+                continue                   # raced a concurrent evictor
+        excess = len(aged) - self.max_entries
+        if excess <= 0:
+            return 0
+        tel = _obs.get()
+        removed = 0
+        for _, p in sorted(aged):
+            if removed >= excess:
+                break
+            if p == keep:
+                continue
+            try:
+                os.unlink(p)
+            except OSError:
+                continue                   # another writer won the race
+            removed += 1
+            if tel.enabled:
+                tel.counter("store.evict").inc()
+                tel.event("store.evict", path=p)
+        with self._lock:
+            self.evictions += removed
+        return removed
 
     # -- read ----------------------------------------------------------------
     def get(self, key: str, fingerprint: Any = None) -> Optional[Any]:
@@ -213,6 +266,10 @@ class PlanStore:
             self.hits += 1
         if tel.enabled:
             tel.counter("store.hit").inc()
+        try:
+            os.utime(path)       # refresh recency for the LRU evictor
+        except OSError:
+            pass                 # evicted/quarantined between read and touch
         return plan
 
     def _verify(self, key: str, path: str, raw: str) -> Optional[Any]:
@@ -279,7 +336,9 @@ class PlanStore:
             return {"root": self.root, "entries": len(self),
                     "hits": self.hits, "misses": self.misses,
                     "writes": self.writes,
-                    "quarantined": self.quarantined}
+                    "quarantined": self.quarantined,
+                    "evictions": self.evictions,
+                    "max_entries": self.max_entries}
 
     def __repr__(self) -> str:
         return (f"PlanStore(root={self.root!r}, entries={len(self)}, "

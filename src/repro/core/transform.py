@@ -103,6 +103,151 @@ def csr_from_rows(row_cols: Sequence[np.ndarray], row_vals: Sequence[np.ndarray]
 
 
 # ---------------------------------------------------------------------------
+# incremental CSR edits (streaming substrate; see repro.stream.delta)
+# ---------------------------------------------------------------------------
+def csr_append_rows(m: CSR, row_cols: Sequence[np.ndarray],
+                    row_vals: Sequence[np.ndarray], *,
+                    in_place: bool = True, growth: float = 2.0,
+                    lens: Optional[np.ndarray] = None) -> CSR:
+    """Append whole rows at the tail in O(Δnnz).
+
+    When the existing ``nnz_pad`` slack can hold the new nonzeros (and
+    ``in_place`` is allowed) the data/cols buffers are written in place and
+    **shared** with the input; otherwise fresh buffers are allocated with
+    ``growth``× headroom so repeated appends amortize.  Only the indptr is
+    ever rebuilt (O(n) int copy).
+
+    ``row_cols``/``row_vals`` are per-row arrays — or, with ``lens``
+    given, single already-flattened arrays (the memoized form a caller
+    that appends the same batch shape repeatedly can reuse)."""
+    flat = isinstance(row_cols, np.ndarray)
+    if lens is None:
+        if flat:
+            raise ValueError("flattened row_cols requires explicit lens")
+        k = len(row_cols)
+        lens = np.fromiter((len(c) for c in row_cols), count=k,
+                           dtype=np.int64)
+    else:
+        k = int(np.asarray(lens).shape[0])
+    if k == 0:
+        return m
+    n_rows, n_cols = m.shape
+    d = int(lens.sum())
+    new_nnz = m.nnz + d
+    ip = np.asarray(m.indptr)
+    new_ip = np.empty(n_rows + k + 1, dtype=ip.dtype)
+    new_ip[: n_rows + 1] = ip
+    new_ip[n_rows + 1:] = m.nnz + np.cumsum(lens)
+    data, cols = np.asarray(m.data), np.asarray(m.cols)
+    if in_place and new_nnz <= m.nnz_pad:
+        out_d, out_c = data, cols
+    else:
+        new_pad = max(new_nnz, int(growth * m.nnz_pad))
+        out_d = np.empty(new_pad, dtype=data.dtype)
+        out_c = np.empty(new_pad, dtype=cols.dtype)
+        out_d[: m.nnz] = data[: m.nnz]
+        out_c[: m.nnz] = cols[: m.nnz]
+        # only the slack needs the (0, 0) pad convention; [nnz, new_nnz)
+        # is overwritten by the appended entries below
+        out_d[new_nnz:] = 0
+        out_c[new_nnz:] = 0
+    if d:
+        out_d[m.nnz:new_nnz] = row_vals if flat else np.concatenate(
+            [np.asarray(v, dtype=out_d.dtype) for v in row_vals])
+        out_c[m.nnz:new_nnz] = row_cols if flat else np.concatenate(
+            [np.asarray(c, dtype=out_c.dtype) for c in row_cols])
+    return CSR(data=out_d, cols=out_c, indptr=new_ip,
+               shape=(n_rows + k, n_cols), nnz=new_nnz)
+
+
+def csr_set_values(m: CSR, rows: np.ndarray, cols: np.ndarray,
+                   vals: np.ndarray, *, in_place: bool = True):
+    """Overwrite existing nonzeros in O(Δ · row_len).
+
+    Returns ``(csr, hit)`` where ``hit[i]`` is False when ``(rows[i],
+    cols[i])`` has no stored entry (the caller routes misses to
+    :func:`csr_splice` as inserts).  With ``in_place`` the value buffer is
+    mutated and the input CSR object itself is returned."""
+    rows = np.asarray(rows, dtype=np.int64)
+    cols_q = np.asarray(cols, dtype=np.int64)
+    ip = np.asarray(m.indptr)
+    mc = np.asarray(m.cols)
+    nq = rows.shape[0]
+    pos = np.full(nq, -1, dtype=np.int64)
+    if nq:
+        # one flat probe over every queried row's segment (no per-query
+        # Python loop): cell i of query q probes mc[ip[rows[q]] + i]
+        s = ip[rows].astype(np.int64)
+        seg = (ip[rows + 1] - ip[rows]).astype(np.int64)
+        offs = np.concatenate([[0], np.cumsum(seg)])
+        total = int(offs[-1])
+        if total:
+            ridx = np.repeat(np.arange(nq, dtype=np.int64), seg)
+            flat = s[ridx] + (np.arange(total, dtype=np.int64) - offs[ridx])
+            mi = np.flatnonzero(mc[flat] == cols_q[ridx])
+            if mi.size:
+                # first stored match per query, as cells are row-major
+                q_first, first_idx = np.unique(ridx[mi], return_index=True)
+                pos[q_first] = flat[mi[first_idx]]
+    hit = pos >= 0
+    if not hit.any():
+        return m, hit
+    data = np.asarray(m.data)
+    if not in_place:
+        data = data.copy()
+    data[pos[hit]] = np.asarray(vals, dtype=data.dtype)[hit]
+    if in_place:
+        return m, hit
+    return CSR(data=data, cols=np.asarray(m.cols), indptr=ip,
+               shape=m.shape, nnz=m.nnz), hit
+
+
+def csr_splice(m: CSR,
+               insert_rows: np.ndarray, insert_cols: np.ndarray,
+               insert_vals: np.ndarray,
+               delete_rows: np.ndarray, delete_cols: np.ndarray) -> CSR:
+    """Insert/delete individual nonzeros via one vectorized memmove.
+
+    O(nnz) — far cheaper than any format re-transform, but not O(Δ); the
+    streaming layer records it as its own apply mode.  Deletes of absent
+    entries are ignored; inserts land at their row's end (CSR does not
+    require column order within a row)."""
+    n_rows = m.n_rows
+    nnz = m.nnz
+    live_d = np.asarray(m.data)[:nnz]
+    live_c = np.asarray(m.cols)[:nnz]
+    ip = np.asarray(m.indptr).astype(np.int64)
+    delete_rows = np.asarray(delete_rows, dtype=np.int64)
+    if delete_rows.shape[0]:
+        delete_cols = np.asarray(delete_cols, dtype=np.int64)
+        keep = np.ones(nnz, dtype=bool)
+        del_counts = np.zeros(n_rows, dtype=np.int64)
+        for r, c in zip(delete_rows, delete_cols):
+            s, e = int(ip[r]), int(ip[r + 1])
+            idx = np.nonzero(live_c[s:e] == c)[0]
+            if idx.size and keep[s + int(idx[0])]:
+                keep[s + int(idx[0])] = False
+                del_counts[r] += 1
+        live_d, live_c = live_d[keep], live_c[keep]
+        ip = ip - np.concatenate([[0], np.cumsum(del_counts)])
+    insert_rows = np.asarray(insert_rows, dtype=np.int64)
+    if insert_rows.shape[0]:
+        order = np.argsort(insert_rows, kind="stable")
+        ir = insert_rows[order]
+        ic = np.asarray(insert_cols, dtype=np.int64)[order]
+        iv = np.asarray(insert_vals)[order]
+        live_d = np.insert(live_d, ip[ir + 1], iv.astype(live_d.dtype))
+        live_c = np.insert(live_c, ip[ir + 1], ic.astype(live_c.dtype))
+        add = np.bincount(ir, minlength=n_rows)
+        ip = ip + np.concatenate([[0], np.cumsum(add)])
+    new_nnz = int(live_d.shape[0])
+    new_pad = max(m.nnz_pad, new_nnz)
+    return CSR(data=_pad1(live_d, new_pad), cols=_pad1(live_c, new_pad),
+               indptr=ip.astype(np.asarray(m.indptr).dtype),
+               shape=m.shape, nnz=new_nnz)
+
+
+# ---------------------------------------------------------------------------
 # CRS -> COO-Row (host): trivial, row ids from IRP (paper: "easy" direction)
 # ---------------------------------------------------------------------------
 @_traced("coo_row")
@@ -338,6 +483,7 @@ TRANSFORMS_HOST = {
 
 __all__ = [
     "pad_to_multiple", "csr_from_dense", "csr_from_rows",
+    "csr_append_rows", "csr_set_values", "csr_splice",
     "host_csr_to_coo_row", "host_csr_to_ccs_paper", "host_csr_to_ccs",
     "host_csr_to_coo_col", "host_csr_to_ell", "host_csr_to_sell",
     "device_csr_to_ell", "device_csr_to_coo_row", "device_csr_to_coo_col",

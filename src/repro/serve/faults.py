@@ -19,6 +19,10 @@ point              where it fires
                    verification + quarantine on the next load)
 ``clock.skew``     every timestamp the ``SpMVService`` takes jumps forward
                    by ``SKEW_S`` (exercises deadline-flush robustness)
+``delta.corrupt``  :func:`repro.stream.delta.apply_delta` poisons the
+                   incrementally updated container right before validation
+                   (exercises the degrade-to-full-re-transform path: a bad
+                   delta apply must never serve wrong results)
 =================  ========================================================
 
 Faults are **deterministic**: each armed point draws from its own seeded
@@ -56,7 +60,7 @@ from typing import Dict, Optional, Tuple
 #: the known fault-point vocabulary (arming an unknown point is an error —
 #: a typo'd point would otherwise silently never fire)
 FAULT_POINTS = ("kernel.raise", "kernel.nan", "transform.raise",
-                "store.corrupt", "clock.skew")
+                "store.corrupt", "clock.skew", "delta.corrupt")
 
 #: seconds a fired ``clock.skew`` adds to a timestamp
 SKEW_S = 1.0

@@ -45,6 +45,10 @@ from repro.serve import faults as _faults
 #: breaker states
 CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
 
+#: numeric encoding of the state machine for the ``service.breaker_state``
+#: gauge (Prometheus gauges carry floats, not strings)
+STATE_CODES = {CLOSED: 0, OPEN: 1, HALF_OPEN: 2}
+
 
 class GuardError(RuntimeError):
     """Every rung of a guarded ladder failed.  Carries the per-rung
@@ -118,10 +122,17 @@ class CircuitBreaker:
                       consecutive=self.consecutive)
             tel.gauge("guard.breaker_open", key=self.key, fmt=self.fmt,
                       op=self.op).set(1.0 if to == OPEN else 0.0)
+            # full state machine as a labelled gauge (0=closed, 1=open,
+            # 2=half_open) so dashboards see half-open probes, not just
+            # the open/closed projection above
+            tel.gauge("service.breaker_state", key=self.key, fmt=self.fmt,
+                      op=self.op).set(float(STATE_CODES[to]))
 
     def snapshot(self) -> Dict[str, Any]:
         with self._lock:
-            return {"state": self.state, "consecutive": self.consecutive,
+            return {"state": self.state,
+                    "state_code": STATE_CODES[self.state],
+                    "consecutive": self.consecutive,
                     "opens": self.opens, "failures": self.failures,
                     "cooldown_s": self.cooldown_s}
 
@@ -276,5 +287,5 @@ def guard_ladder(key: str, op: str, rungs: Sequence[Tuple[str, Callable]],
                        clock=clock, fault_registry=fault_registry)
 
 
-__all__ = ["CLOSED", "OPEN", "HALF_OPEN", "GuardError", "CircuitBreaker",
-           "Rung", "GuardedImpl", "guard_ladder"]
+__all__ = ["CLOSED", "OPEN", "HALF_OPEN", "STATE_CODES", "GuardError",
+           "CircuitBreaker", "Rung", "GuardedImpl", "guard_ladder"]

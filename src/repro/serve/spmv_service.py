@@ -60,6 +60,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 import repro.obs as _obs
 from repro.analyze.findings import PlanLintError
@@ -144,6 +145,14 @@ class MatrixEntry:
     # guards pending/dead: submit() may race flush()/evict() across threads
     lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
     dead: bool = False          # set by _release; refuses new submits
+    # -- streaming (repro.stream): registered with streaming=True ------------
+    streaming: bool = False
+    sketch: Optional[Any] = None        # stream.drift.DriftSketch
+    stream_policy: Optional[Any] = None  # stream.drift.ReplanPolicy
+    stream_kw: Dict[str, Any] = field(default_factory=dict)  # re-plan knobs
+    deltas: int = 0             # DeltaBatches absorbed by this key
+    replans: int = 0            # drift-triggered re-registrations
+    last_stream_decision: Optional[Any] = None  # stream.drift.DriftDecision
 
     def formats(self) -> Dict[str, int]:
         return self.report.format_counts()
@@ -270,32 +279,39 @@ class SpMVService:
                 cooldown_s=self.breaker_cooldown_s, clock=self._now)
         return br
 
-    def _build_guards(self, key: str, csr: CSR, matrix: Any,
-                      fn: Callable, spmm_fn: Callable,
+    def _build_guards(self, key: str, entry: MatrixEntry,
                       fmt: str, sharded: bool = False
                       ) -> Dict[str, GuardedImpl]:
         """The per-(key, op) ladders: tuned → reference-format →
         reference-CSR (sharded entries skip the middle rung — their
         reference tier *is* per-shard CSR).  The source matrix is kept on
-        the entry purely so the last rung always exists."""
+        the entry purely so the last rung always exists.
+
+        Every rung reads ``entry.matrix`` / ``entry.source`` / ``entry.fn``
+        at call time rather than closing over them: a streaming key's
+        containers are swapped in place by :meth:`apply_delta`, and the
+        ladder must keep serving the *current* matrix across swaps.  The
+        jitted reference wrappers take the matrix as an argument, so a
+        swap reuses the compiled executable when the block structure is
+        unchanged."""
         if not self.guard:
             return {}
         budget_s = self.budget_ms / 1e3 if self.budget_ms else None
         csr_mv = jax.jit(spmv_ref)
         csr_mm = jax.jit(_dispatch.get_impl("csr", "spmm", "reference"))
         rungs: Dict[str, List[Tuple[str, Callable]]] = {
-            "spmv": [("tuned", lambda x: fn(matrix, x))],
-            "spmm": [("tuned", lambda x: spmm_fn(matrix, x))],
+            "spmv": [("tuned", lambda x: entry.fn(entry.matrix, x))],
+            "spmm": [("tuned", lambda x: entry.spmm_fn(entry.matrix, x))],
         }
         if not sharded:
             ref_mv = jax.jit(lambda m, x: spmv_hybrid(m, x))
             ref_mm = jax.jit(lambda m, x: spmm_hybrid(m, x))
             rungs["spmv"].append(("reference",
-                                  lambda x: ref_mv(matrix, x)))
+                                  lambda x: ref_mv(entry.matrix, x)))
             rungs["spmm"].append(("reference",
-                                  lambda x: ref_mm(matrix, x)))
-        rungs["spmv"].append(("csr", lambda x: csr_mv(csr, x)))
-        rungs["spmm"].append(("csr", lambda x: csr_mm(csr, x)))
+                                  lambda x: ref_mm(entry.matrix, x)))
+        rungs["spmv"].append(("csr", lambda x: csr_mv(entry.source, x)))
+        rungs["spmm"].append(("csr", lambda x: csr_mm(entry.source, x)))
         return {op: guard_ladder(
             key, op, rungs[op], fmt=fmt,
             breaker=self._breaker(key, fmt, op),
@@ -335,6 +351,8 @@ class SpMVService:
                  measure_baseline: bool = True, batch: int = 1,
                  plan: Optional[ExecutionPlan] = None,
                  strict_lint: bool = False,
+                 streaming: bool = False,
+                 stream_policy: Optional[Any] = None,
                  **build_kw) -> MatrixEntry:
         """Build the per-block-tuned operator for ``csr`` under ``key``.
 
@@ -380,11 +398,21 @@ class SpMVService:
         matches a previous registration, *anywhere in the fleet*, replays
         the stored plan with zero re-tuning; a fresh build writes its plan
         back.  Hits/misses land in ``stats()['plan_cache']`` /
-        ``stats()['plan_store']``."""
+        ``stats()['plan_store']``.
+
+        ``streaming=True`` marks the key *dynamic* (docs/streaming.md):
+        the entry carries a :class:`~repro.stream.drift.DriftSketch` and a
+        :class:`~repro.stream.drift.ReplanPolicy` (override with
+        ``stream_policy``), and :meth:`apply_delta` may be called to
+        mutate the matrix in place.  Sharded plans do not support
+        streaming."""
         csr.validate()       # malformed input fails here, typed, not as
         #                      garbage inside a kernel (MatrixValidationError)
         plan = self._lint_registered_plan(key, plan, strict_lint)
         if isinstance(plan, ShardedPlan):
+            if streaming:
+                raise ValueError(
+                    "streaming=True is not supported for sharded plans")
             return self._register_sharded(
                 key, csr, plan, expected_iterations=expected_iterations,
                 measure_baseline=measure_baseline, batch=batch, **build_kw)
@@ -445,15 +473,18 @@ class SpMVService:
             t_csr = time_fn(jax.jit(spmv_ref), csr, x0, iters=1,
                             warmup=1)
             t_hyb = time_fn(fn, hyb, x0, iters=1, warmup=1)
-        guards = self._build_guards(key, csr, hyb, fn, spmm_fn,
-                                    fmt="hybrid")
         entry = MatrixEntry(matrix=hyb, report=report, fn=fn,
                             spmm_fn=spmm_fn, t_build=t_build, t_csr=t_csr,
                             t_hybrid=t_hyb, builds=builds, tunings=tunings,
                             plan=entry_plan, from_plan=plan_matched,
-                            source=csr, guards=guards,
+                            source=csr,
                             max_batch=(plan.batch if plan is not None
                                        and plan.batch > 1 else None))
+        entry.guards = self._build_guards(key, entry, fmt="hybrid")
+        if streaming:
+            self._attach_streaming(entry, csr, expected_iterations,
+                                   measure_baseline, batch, stream_policy,
+                                   build_kw)
         if cache_key is not None and entry_plan is not None \
                 and not plan_matched:
             self._plan_cache[cache_key] = entry_plan
@@ -609,15 +640,15 @@ class SpMVService:
             x0 = jnp.ones((csr.n_cols,), jnp.float32)
             t_csr = time_fn(jax.jit(spmv_ref), csr, x0, iters=1, warmup=1)
             t_hyb = time_fn(fn, spm, x0, iters=1, warmup=1)
-        guards = self._build_guards(key, csr, spm, fn, spmm_fn,
-                                    fmt="sharded", sharded=True)
         entry = MatrixEntry(matrix=spm, report=_ShardedReport(spm), fn=fn,
                             spmm_fn=spmm_fn, t_build=t_build, t_csr=t_csr,
                             t_hybrid=t_hyb, builds=builds, tunings={},
                             plan=plan, from_plan=matched,
-                            source=csr, guards=guards,
+                            source=csr,
                             max_batch=plan.batch if plan.batch > 1
                             else None)
+        entry.guards = self._build_guards(key, entry, fmt="sharded",
+                                          sharded=True)
         self.entries[key] = entry
         if prior is not None:
             try:
@@ -627,6 +658,132 @@ class SpMVService:
                 _swallow("reregister_flush", e)
             self._release(key, prior)
         return entry
+
+    # -- streaming (repro.stream) --------------------------------------------
+    def _attach_streaming(self, entry: MatrixEntry, csr: CSR,
+                          expected_iterations: int, measure_baseline: bool,
+                          batch: int, stream_policy: Optional[Any],
+                          build_kw: Dict[str, Any]) -> None:
+        """Arm a freshly registered entry for :meth:`apply_delta`: an exact
+        drift sketch of the matrix as registered, a re-plan policy priced
+        against the service's tuning DB, and the registration knobs a
+        drift-triggered re-registration must replay."""
+        from repro.stream.drift import DriftSketch, ReplanPolicy
+        entry.streaming = True
+        entry.sketch = DriftSketch.of(csr)
+        entry.stream_policy = stream_policy if stream_policy is not None \
+            else ReplanPolicy(db=self.db, batch=batch,
+                              default_k=float(expected_iterations))
+        entry.stream_kw = {"expected_iterations": expected_iterations,
+                           "measure_baseline": measure_baseline,
+                           "batch": batch, **build_kw}
+
+    def apply_delta(self, key: str, delta: Any) -> Any:
+        """Absorb one :class:`~repro.stream.delta.DeltaBatch` into a
+        ``streaming=True`` key and return the
+        :class:`~repro.stream.delta.DeltaApplyResult`.
+
+        The pending micro-batch panel is flushed first (``cause="delta"``)
+        so queued futures are served against the matrix they were
+        submitted for — deltas serialize with the flush queue.  A
+        single-block CSR/SELL operator is updated *incrementally*
+        (O(Δnnz) tail appends, per-slice SELL rebuilds) by swapping the
+        entry's containers in place — the compiled dispatchers and guard
+        ladders read the entry dynamically, so no rebind happens and the
+        per-``(key, fmt, op)`` circuit breakers keep their state.  Any
+        other operator shape degrades to a CSR apply plus a full
+        re-registration (recorded as a fallback).  After the apply, the
+        drift sketch folds in the row-length changes and the policy's
+        hysteresis + streaming-amortization rule decides whether the
+        paper's threshold now picks a different format; if so the key is
+        re-registered under its original knobs (``stream.replan``)."""
+        from repro.stream.delta import INCREMENTAL_FORMATS
+        from repro.stream.delta import apply_delta as _apply_delta
+        entry = self.entries[key]
+        if not entry.streaming:
+            raise ValueError(
+                f"matrix {key!r} was not registered with streaming=True")
+        try:
+            self._flush_entry(entry, key=key, cause="delta")
+        except (RuntimeError, ValueError, TypeError,
+                ArithmeticError) as e:
+            # the panel's futures already carry the exception; the delta
+            # must still land or the key's state forks from its writers
+            _swallow("delta_flush", e)
+        hyb = entry.matrix
+        leaf = (getattr(hyb, "n_blocks", 0) == 1
+                and getattr(hyb, "identity_perm", False)
+                and hyb.formats[0] in INCREMENTAL_FORMATS)
+        if leaf:
+            fmt = hyb.formats[0]
+            params: Dict[str, Any] = {}
+            if entry.plan is not None and entry.plan.transform is not None:
+                params = dict(entry.plan.transform.params or {})
+            res = _apply_delta(entry.source, delta,
+                               container=hyb.blocks[0], fmt=fmt,
+                               transform_params=params, key=key)
+            perm = hyb.perm
+            if res.csr.n_rows != int(perm.shape[0]):  # rows appended
+                perm = np.arange(res.csr.n_rows, dtype=np.int32)
+            new_hyb = hyb.__class__(
+                perm=perm, blocks=(res.container,), row_offsets=(0,),
+                formats=(fmt,), shape=res.csr.shape, nnz=res.csr.nnz,
+                identity_perm=True)
+            with entry.lock:
+                entry.matrix = new_hyb
+                entry.source = res.csr
+                entry.deltas += 1
+            entry.sketch.update(res)
+        else:
+            # multi-block (or non-incremental leaf) operators re-partition
+            # wholesale: apply to the source CSR, then rebuild the operator
+            res = _apply_delta(entry.source, delta, fmt="csr", key=key)
+            res.fallback = True
+            res.fallback_reason = res.fallback_reason or "nonleaf"
+            res.mode = "rebuild"
+            # the rebuild re-derives the sketch exactly from the new
+            # matrix, so no incremental update on top of it
+            entry = self._replan_streaming(key, entry, res.csr,
+                                           deltas=entry.deltas + 1)
+        pol = entry.stream_policy
+        pol.note_update()
+        current_fmt = entry.plan.fmt if entry.plan is not None else "csr"
+        dec = pol.decide(entry.sketch.d_mat, current_fmt=current_fmt,
+                         key=key)
+        if dec.replan:
+            entry = self._replan_streaming(key, entry, entry.source,
+                                           deltas=entry.deltas,
+                                           decision=dec)
+        entry.last_stream_decision = dec
+        return res
+
+    def _replan_streaming(self, key: str, entry: MatrixEntry, csr: CSR,
+                          deltas: int, decision: Optional[Any] = None
+                          ) -> MatrixEntry:
+        """Re-register a streaming key under its original knobs.  The new
+        entry inherits the policy (its k̂ estimate and cooldown survive)
+        and the delta/replan counters; the sketch is re-derived exactly
+        from the post-delta matrix.  Circuit breakers live on the service
+        keyed by ``(key, fmt, op)`` and are untouched — a breaker opened
+        on the tuned rung stays open across the re-plan."""
+        old_policy, old_replans = entry.stream_policy, entry.replans
+        old_fmt = entry.plan.fmt if entry.plan is not None else "csr"
+        new = self.register(key, csr, streaming=True,
+                            stream_policy=old_policy, **entry.stream_kw)
+        new.deltas = deltas
+        new.replans = old_replans
+        if decision is not None:
+            new.replans += 1
+            old_policy.deltas_since_replan = 0
+            tel = _obs.get()
+            if tel.enabled:
+                tel.counter("stream.replans", key=key).inc()
+                tel.event("stream.replan", key=key, old_fmt=old_fmt,
+                          new_fmt=new.plan.fmt if new.plan is not None
+                          else "csr", d_mat=decision.d_mat,
+                          d_star=decision.d_star, k_hat=decision.k_hat,
+                          reason=decision.reason)
+        return new
 
     # -- direct paths --------------------------------------------------------
     def _run(self, entry: MatrixEntry, op: str, x: jax.Array) -> jax.Array:
@@ -645,6 +802,8 @@ class SpMVService:
         with entry.lock:
             entry.n_calls += 1
             entry.t_serve += dt
+            if entry.stream_policy is not None:
+                entry.stream_policy.note_query()
         tel = _obs.get()
         if tel.enabled:
             tel.histogram("service.query_latency_s", key=key,
@@ -664,6 +823,9 @@ class SpMVService:
             entry.n_spmm_calls += 1
             entry.n_spmm_cols += int(x.shape[1])
             entry.t_serve += dt
+            if entry.stream_policy is not None:
+                # k̂ counts *products*: a B-wide panel is B queries
+                entry.stream_policy.note_query(int(x.shape[1]))
         tel = _obs.get()
         if tel.enabled:
             tel.histogram("service.query_latency_s", key=key,
@@ -834,6 +996,8 @@ class SpMVService:
             entry.n_spmm_calls += 1
             entry.n_spmm_cols += b
             entry.t_serve += dt
+            if entry.stream_policy is not None:
+                entry.stream_policy.note_query(b)
             # the admission controller's wait predictor: a slow-moving EMA
             # of flush latency (zero-cost under FakeClock — dt stays 0)
             entry.flush_ema_s = (dt if entry.flush_ema_s == 0.0
@@ -936,6 +1100,18 @@ class SpMVService:
                               else saved >= e.t_build),
                 "telemetry": self._entry_telemetry(key),
             }
+            if e.streaming:
+                out[key]["streaming"] = {
+                    "deltas": e.deltas,
+                    "replans": e.replans,
+                    "d_mat": e.sketch.d_mat if e.sketch is not None
+                    else None,
+                    "k_hat": (e.stream_policy.k_hat
+                              if e.stream_policy is not None else None),
+                    "last_decision": (e.last_stream_decision.reason
+                                      if e.last_stream_decision is not None
+                                      else None),
+                }
         # reserved keys (no matrix may register under them): service-wide
         # plan-cache / plan-store / breaker health — consumers index
         # stats() by matrix key

@@ -1,0 +1,35 @@
+"""repro.stream — dynamic matrices for the tuned serving stack.
+
+Production matrices mutate: graph edges arrive, KV pages fill, MoE
+routing shifts.  This package keeps the paper's run-time-transformation
+economics honest under mutation:
+
+* :mod:`repro.stream.delta` — :class:`DeltaBatch` edits applied to CSR
+  and SELL containers **incrementally** (O(Δnnz) tail appends, per-slice
+  SELL rebuilds) with a validated full-re-transform fallback for every
+  other format;
+* :mod:`repro.stream.drift` — an O(Δ)-updatable (mu, sigma, D_mat)
+  sketch, the hysteresis + streaming-amortization re-plan trigger, and
+  :class:`StreamingPlannedMatrix` gluing both onto a bound plan;
+* :mod:`repro.stream.capture` / :mod:`repro.stream.replay` — JSONL
+  workload traces recorded at serve time and replayed through
+  ``offline_phase`` so tuning sees the real access pattern.
+
+See ``docs/streaming.md`` for the delta schema, drift rule, and
+amortized accounting.
+"""
+from .capture import TRACE_VERSION, TraceCapture, load_trace
+from .delta import (DELTA_SCHEMA_VERSION, INCREMENTAL_FORMATS, DeltaBatch,
+                    DeltaApplyResult, apply_delta, random_delta, sell_apply)
+from .drift import (HIST_BUCKETS, STREAM_PLAN_SCHEMA_VERSION, DriftDecision,
+                    DriftSketch, ReplanPolicy, StreamingPlannedMatrix)
+from .replay import ReplayStats, epochs_of, replay, replay_file
+
+__all__ = [
+    "DELTA_SCHEMA_VERSION", "INCREMENTAL_FORMATS", "DeltaBatch",
+    "DeltaApplyResult", "apply_delta", "random_delta", "sell_apply",
+    "HIST_BUCKETS", "STREAM_PLAN_SCHEMA_VERSION", "DriftDecision",
+    "DriftSketch", "ReplanPolicy", "StreamingPlannedMatrix",
+    "TRACE_VERSION", "TraceCapture", "load_trace",
+    "ReplayStats", "epochs_of", "replay", "replay_file",
+]

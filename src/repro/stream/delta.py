@@ -1,0 +1,555 @@
+"""Incremental transforms: apply a :class:`DeltaBatch` without re-transforming.
+
+The paper's amortization rule ``k·B·(t_crs−t_f) > t_trans`` prices the
+transform as a one-time cost — a mutating matrix pays it on every change
+unless the transformed container can absorb the change *incrementally*.
+This module is that absorber:
+
+* **CSR** — whole-row appends are O(Δnnz) tail writes into the existing
+  ``nnz_pad`` slack (:func:`repro.core.transform.csr_append_rows`); value
+  overwrites are O(Δ) in-place stores; nnz inserts/deletes degrade to one
+  vectorized O(nnz) splice (:func:`~repro.core.transform.csr_splice`) —
+  still far below a format re-transform.
+* **SELL** (:class:`~repro.core.formats.BucketedELL`) — value updates
+  rewrite only the affected row slice; appended or relocated rows rebuild
+  only their target bucket; the widest bucket widens in place when a row
+  outgrows every bucket.  All :meth:`BucketedELL.validate` invariants
+  (permutation, contiguous tiling, strictly decreasing widths, nnz
+  accounting) are preserved.
+* **Every other format** falls back to a full re-transform from the
+  updated CSR, with the cost recorded (``mode="rebuild"``) so the drift
+  layer can price it honestly.
+
+Safety: the updated CSR is validated after every apply, the incrementally
+updated container goes through ``validate_container``, and a failed
+container (including one poisoned by the ``delta.corrupt`` chaos fault)
+degrades to a clean full re-transform — a bad delta apply costs time,
+never correctness.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import repro.obs as _obs
+from repro.core.formats import (CSR, ELL, BucketedELL, MatrixValidationError,
+                                validate_container)
+from repro.core.transform import (csr_append_rows, csr_set_values, csr_splice,
+                                  pad_to_multiple)
+from repro.serve import faults as _faults
+
+#: version stamp carried by the JSON form (lint + capture traces key on it)
+DELTA_SCHEMA_VERSION = 1
+
+#: formats apply_delta can update incrementally; everything else rebuilds
+INCREMENTAL_FORMATS = ("csr", "sell")
+
+
+def _empty_i() -> np.ndarray:
+    return np.zeros(0, dtype=np.int64)
+
+
+def _empty_f() -> np.ndarray:
+    return np.zeros(0, dtype=np.float32)
+
+
+@dataclass(frozen=True)
+class DeltaBatch:
+    """One batch of structural/value changes to a sparse matrix.
+
+    Three change kinds, applied in this order:
+
+    * ``update_*`` — point writes ``A[r, c] = v``: overwrite when the
+      entry exists, insert when absent.  Rows must already exist.
+    * ``delete_*`` — remove stored entries ``(r, c)``; absent entries are
+      ignored (idempotent deletes).
+    * ``append_*`` — whole new rows at the tail, as per-row (cols, vals)
+      array pairs (the matrix grows by ``len(append_cols)`` rows).
+
+    The column count is fixed: deltas never change ``n_cols``.
+    """
+
+    n_cols: int
+    append_cols: Tuple[np.ndarray, ...] = ()
+    append_vals: Tuple[np.ndarray, ...] = ()
+    update_rows: np.ndarray = field(default_factory=_empty_i)
+    update_cols: np.ndarray = field(default_factory=_empty_i)
+    update_vals: np.ndarray = field(default_factory=_empty_f)
+    delete_rows: np.ndarray = field(default_factory=_empty_i)
+    delete_cols: np.ndarray = field(default_factory=_empty_i)
+
+    # -- shape ----------------------------------------------------------------
+    @property
+    def n_appends(self) -> int:
+        return len(self.append_cols)
+
+    @property
+    def nnz_delta(self) -> int:
+        """Upper bound on touched nonzeros (appends + updates + deletes)."""
+        app = int(sum(len(c) for c in self.append_cols))
+        return app + int(self.update_rows.shape[0]) \
+            + int(self.delete_rows.shape[0])
+
+    @property
+    def empty(self) -> bool:
+        return self.nnz_delta == 0
+
+    def _append_flat(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """``(lens, flat_cols, flat_vals)`` over the appended rows,
+        memoized — the batch is frozen, so the flattening is paid once no
+        matter how many times the delta is validated or applied."""
+        cached = getattr(self, "_flat_cache", None)
+        if cached is None:
+            k = len(self.append_cols)
+            lens = np.fromiter((len(np.asarray(c)) for c in self.append_cols),
+                               count=k, dtype=np.int64)
+            if k and int(lens.sum()):
+                flat_c = np.concatenate(
+                    [np.asarray(c, dtype=np.int64) for c in self.append_cols])
+                flat_v = np.concatenate(
+                    [np.asarray(v, dtype=np.float32)
+                     for v in self.append_vals])
+            else:
+                flat_c, flat_v = _empty_i(), _empty_f()
+            cached = (lens, flat_c, flat_v)
+            object.__setattr__(self, "_flat_cache", cached)
+        return cached
+
+    # -- validation -----------------------------------------------------------
+    def validate(self, n_rows: Optional[int] = None) -> "DeltaBatch":
+        """Raise :class:`ValueError` on the first malformed field."""
+        if self.n_cols <= 0:
+            raise ValueError(f"n_cols must be positive; got {self.n_cols}")
+        if len(self.append_cols) != len(self.append_vals):
+            raise ValueError(
+                f"{len(self.append_cols)} appended col rows vs "
+                f"{len(self.append_vals)} value rows")
+        if self.append_cols and not getattr(self, "_appends_ok", False):
+            k = len(self.append_cols)
+            v_lens = np.fromiter((len(np.asarray(v))
+                                  for v in self.append_vals),
+                                 count=k, dtype=np.int64)
+            c_lens, allc, _ = self._append_flat()
+            bad = np.nonzero(c_lens != v_lens)[0]
+            if bad.size:
+                i = int(bad[0])
+                raise ValueError(f"appended row {i}: {c_lens[i]} cols vs "
+                                 f"{v_lens[i]} vals")
+            if allc.size:
+                if int(allc.min()) < 0 or int(allc.max()) >= self.n_cols:
+                    off = int(np.nonzero((allc < 0)
+                                         | (allc >= self.n_cols))[0][0])
+                    i = int(np.searchsorted(np.cumsum(c_lens), off,
+                                            side="right"))
+                    raise ValueError(f"appended row {i}: column out of "
+                                     f"[0, {self.n_cols})")
+            object.__setattr__(self, "_appends_ok", True)
+        for name, rows, cols in (("update", self.update_rows,
+                                  self.update_cols),
+                                 ("delete", self.delete_rows,
+                                  self.delete_cols)):
+            rows, cols = np.asarray(rows), np.asarray(cols)
+            if rows.shape != cols.shape:
+                raise ValueError(f"{name}: rows {rows.shape} vs cols "
+                                 f"{cols.shape}")
+            if rows.size:
+                if int(rows.min()) < 0:
+                    raise ValueError(f"{name}: negative row index")
+                if n_rows is not None and int(rows.max()) >= n_rows:
+                    raise ValueError(f"{name}: row {int(rows.max())} out of "
+                                     f"[0, {n_rows}) (appended rows cannot "
+                                     f"be edited in the same batch)")
+                if int(cols.min()) < 0 or int(cols.max()) >= self.n_cols:
+                    raise ValueError(f"{name}: column out of "
+                                     f"[0, {self.n_cols})")
+        if self.update_rows.shape[0] != np.asarray(self.update_vals).shape[0]:
+            raise ValueError(
+                f"update: {self.update_rows.shape[0]} positions vs "
+                f"{np.asarray(self.update_vals).shape[0]} values")
+        return self
+
+    # -- (de)serialization ----------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "kind": "delta_batch",
+            "schema_version": DELTA_SCHEMA_VERSION,
+            "n_cols": int(self.n_cols),
+            "appends": [[np.asarray(c).tolist(), np.asarray(v).tolist()]
+                        for c, v in zip(self.append_cols, self.append_vals)],
+            "updates": {"rows": np.asarray(self.update_rows).tolist(),
+                        "cols": np.asarray(self.update_cols).tolist(),
+                        "vals": np.asarray(self.update_vals).tolist()},
+            "deletes": {"rows": np.asarray(self.delete_rows).tolist(),
+                        "cols": np.asarray(self.delete_cols).tolist()},
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "DeltaBatch":
+        if d.get("kind") != "delta_batch":
+            raise ValueError(f"not a delta_batch payload: "
+                             f"kind={d.get('kind')!r}")
+        if int(d.get("schema_version", -1)) > DELTA_SCHEMA_VERSION:
+            raise ValueError(f"delta schema_version "
+                             f"{d.get('schema_version')} is newer than "
+                             f"supported {DELTA_SCHEMA_VERSION}")
+        ups = d.get("updates") or {}
+        dels = d.get("deletes") or {}
+        return cls(
+            n_cols=int(d["n_cols"]),
+            append_cols=tuple(np.asarray(p[0], dtype=np.int64)
+                              for p in d.get("appends", ())),
+            append_vals=tuple(np.asarray(p[1], dtype=np.float32)
+                              for p in d.get("appends", ())),
+            update_rows=np.asarray(ups.get("rows", ()), dtype=np.int64),
+            update_cols=np.asarray(ups.get("cols", ()), dtype=np.int64),
+            update_vals=np.asarray(ups.get("vals", ()), dtype=np.float32),
+            delete_rows=np.asarray(dels.get("rows", ()), dtype=np.int64),
+            delete_cols=np.asarray(dels.get("cols", ()), dtype=np.int64),
+        ).validate()
+
+
+@dataclass
+class DeltaApplyResult:
+    """What one :func:`apply_delta` did, priced for the drift layer."""
+
+    csr: CSR                       #: the updated source CSR (validated)
+    container: Any                 #: the updated ``fmt`` container
+    fmt: str
+    mode: str                      #: inplace | append | splice | rebuild
+    fallback: bool                 #: True when the incremental path bailed
+    fallback_reason: str
+    t_apply_s: float
+    buckets_rebuilt: int           #: SELL buckets touched structurally
+    appended_lens: np.ndarray      #: per appended row nnz
+    changed_rows: np.ndarray       #: pre-existing rows whose length changed
+    old_lens: np.ndarray
+    new_lens: np.ndarray
+
+
+# ---------------------------------------------------------------------------
+# CSR apply
+# ---------------------------------------------------------------------------
+_MODE_RANK = {"noop": 0, "inplace": 1, "append": 2, "splice": 3,
+              "rebuild": 4}
+
+
+def _apply_csr(m: CSR, delta: DeltaBatch, *, in_place: bool = True):
+    """Route the delta through the cheapest CSR edit primitives.
+
+    Returns ``(csr, mode, changed_rows, old_lens, new_lens,
+    appended_lens)``; ``changed_rows`` are the pre-existing rows touched
+    by updates/deletes (unique, sorted)."""
+    if m.n_cols != delta.n_cols:
+        raise ValueError(f"delta n_cols={delta.n_cols} vs matrix "
+                         f"n_cols={m.n_cols}")
+    delta.validate(m.n_rows)
+    ip0 = np.asarray(m.indptr)
+    changed = np.unique(np.concatenate(
+        [np.asarray(delta.update_rows, dtype=np.int64),
+         np.asarray(delta.delete_rows, dtype=np.int64)])) \
+        if (delta.update_rows.shape[0] or delta.delete_rows.shape[0]) \
+        else _empty_i()
+    old_lens = (ip0[changed + 1] - ip0[changed]).astype(np.int64) \
+        if changed.size else _empty_i()
+
+    cur, modes = m, []
+    miss = np.zeros(0, dtype=bool)
+    if delta.update_rows.shape[0]:
+        cur, hit = csr_set_values(cur, delta.update_rows, delta.update_cols,
+                                  delta.update_vals, in_place=in_place)
+        if hit.any():
+            modes.append("inplace")
+        miss = ~hit
+    if miss.any() or delta.delete_rows.shape[0]:
+        cur = csr_splice(cur,
+                         np.asarray(delta.update_rows)[miss],
+                         np.asarray(delta.update_cols)[miss],
+                         np.asarray(delta.update_vals)[miss],
+                         delta.delete_rows, delta.delete_cols)
+        modes.append("splice")
+    appended_lens, flat_c, flat_v = delta._append_flat()
+    if delta.n_appends:
+        cur = csr_append_rows(cur, flat_c, flat_v, lens=appended_lens,
+                              in_place=in_place)
+        modes.append("append")
+    mode = max(modes, key=_MODE_RANK.__getitem__) if modes else "noop"
+    ip1 = np.asarray(cur.indptr)
+    new_lens = (ip1[changed + 1] - ip1[changed]).astype(np.int64) \
+        if changed.size else _empty_i()
+    return cur, mode, changed, old_lens, new_lens, appended_lens
+
+
+# ---------------------------------------------------------------------------
+# SELL apply
+# ---------------------------------------------------------------------------
+def sell_apply(sell: BucketedELL, new_csr: CSR, n_old: int,
+               changed_rows: np.ndarray, old_lens: np.ndarray,
+               new_lens: np.ndarray, appended_lens: np.ndarray, *,
+               copy: bool = False, width_quantum: int = 8):
+    """Incrementally carry a SELL container to the post-delta matrix.
+
+    ``new_csr`` is the already-updated source; only the affected row
+    slices / buckets are rebuilt.  Returns ``(container,
+    buckets_rebuilt)``; raises :class:`MatrixValidationError` when the
+    container cannot absorb the change (caller rebuilds from scratch)."""
+    if not sell.buckets:
+        raise MatrixValidationError("SELL container has no buckets")
+    nb = len(sell.buckets)
+    offsets = list(sell.row_offsets)
+    perm = np.asarray(sell.perm)
+    ip = np.asarray(new_csr.indptr)
+    src_d, src_c = np.asarray(new_csr.data), np.asarray(new_csr.cols)
+
+    b_rows: List[np.ndarray] = [
+        perm[offsets[j]: offsets[j] + sell.buckets[j].n_rows].copy()
+        for j in range(nb)]
+    b_data: List[Optional[np.ndarray]] = [None] * nb
+    b_cols: List[Optional[np.ndarray]] = [None] * nb
+    b_nnz: List[int] = [int(b.nnz) for b in sell.buckets]
+    widths: List[int] = [int(b.width) for b in sell.buckets]
+    rebuilt = 0
+
+    def arrays(j: int):
+        if b_data[j] is None:
+            d = np.asarray(sell.buckets[j].data)
+            c = np.asarray(sell.buckets[j].cols)
+            if copy:
+                d, c = d.copy(), c.copy()
+            b_data[j], b_cols[j] = d, c
+        return b_data[j], b_cols[j]
+
+    # positions of changed rows under the *original* structure
+    inv = np.empty(n_old, dtype=np.int64)
+    inv[perm] = np.arange(n_old, dtype=np.int64)
+    bounds = np.asarray(offsets + [n_old], dtype=np.int64)
+
+    removals: Dict[int, List[int]] = {}
+    removed_nnz: Dict[int, int] = {}
+    inserts: List[Tuple[int, int]] = []        # (orig row, new length)
+    for r, lo, ln in zip(changed_rows, old_lens, new_lens):
+        p = int(inv[int(r)])
+        j = int(np.searchsorted(bounds, p, side="right")) - 1
+        local = p - offsets[j]
+        if int(ln) <= widths[j]:
+            # value/shrink rewrite in place: only this row's slice changes
+            d, c = arrays(j)
+            d[local, :] = 0
+            c[local, :] = 0
+            s, L = int(ip[int(r)]), int(ln)
+            d[local, :L] = src_d[s:s + L]
+            c[local, :L] = src_c[s:s + L]
+            b_nnz[j] += int(ln) - int(lo)
+        else:
+            removals.setdefault(j, []).append(local)
+            removed_nnz[j] = removed_nnz.get(j, 0) + int(lo)
+            inserts.append((int(r), int(ln)))
+    for i, ln in enumerate(appended_lens):
+        inserts.append((n_old + i, int(ln)))
+
+    for j, locals_ in removals.items():
+        d, c = arrays(j)
+        keep = np.ones(d.shape[0], dtype=bool)
+        keep[np.asarray(locals_, dtype=np.int64)] = False
+        b_data[j], b_cols[j] = d[keep], c[keep]
+        b_rows[j] = b_rows[j][keep]
+        b_nnz[j] -= removed_nnz[j]
+        rebuilt += 1
+
+    if inserts:
+        longest = max(ln for _, ln in inserts)
+        if longest > widths[0]:
+            # widen the widest bucket (stays strictly the widest)
+            new_w = pad_to_multiple(max(longest, 1), width_quantum)
+            d, c = arrays(0)
+            nd = np.zeros((d.shape[0], new_w), dtype=d.dtype)
+            nc = np.zeros((c.shape[0], new_w), dtype=c.dtype)
+            nd[:, : d.shape[1]] = d
+            nc[:, : c.shape[1]] = c
+            b_data[0], b_cols[0] = nd, nc
+            widths[0] = new_w
+            rebuilt += 1
+        by_target: Dict[int, List[Tuple[int, int]]] = {}
+        for r, ln in inserts:
+            # narrowest bucket that still fits the row (widths decrease)
+            target = 0
+            for j in range(nb):
+                if widths[j] >= max(ln, 1):
+                    target = j
+                else:
+                    break
+            by_target.setdefault(target, []).append((r, ln))
+        for j, rows_ in by_target.items():
+            d, c = arrays(j)
+            k = len(rows_)
+            add_d = np.zeros((k, widths[j]), dtype=d.dtype)
+            add_c = np.zeros((k, widths[j]), dtype=c.dtype)
+            for i, (r, ln) in enumerate(rows_):
+                s = int(ip[r])
+                add_d[i, :ln] = src_d[s:s + ln]
+                add_c[i, :ln] = src_c[s:s + ln]
+            b_data[j] = np.concatenate([d, add_d], axis=0)
+            b_cols[j] = np.concatenate([c, add_c], axis=0)
+            b_rows[j] = np.concatenate(
+                [b_rows[j],
+                 np.asarray([r for r, _ in rows_], dtype=b_rows[j].dtype)])
+            b_nnz[j] += int(sum(ln for _, ln in rows_))
+            rebuilt += 1
+
+    keep_idx = [j for j in range(nb) if b_rows[j].shape[0]]
+    if not keep_idx:
+        raise MatrixValidationError("delta emptied every SELL bucket")
+    n_new = new_csr.n_rows
+    new_perm = np.concatenate([b_rows[j] for j in keep_idx]).astype(np.int32)
+    new_offsets, buckets, off = [], [], 0
+    for j in keep_idx:
+        d, c = arrays(j)
+        buckets.append(ELL(data=d, cols=c,
+                           shape=(d.shape[0], new_csr.n_cols),
+                           nnz=b_nnz[j], order="row"))
+        new_offsets.append(off)
+        off += d.shape[0]
+    if off != n_new:
+        raise MatrixValidationError(
+            f"incremental SELL covers {off} rows, expected {n_new}")
+    return BucketedELL(perm=new_perm, buckets=tuple(buckets),
+                       row_offsets=tuple(new_offsets),
+                       shape=new_csr.shape, nnz=new_csr.nnz), rebuilt
+
+
+# ---------------------------------------------------------------------------
+# the orchestrator
+# ---------------------------------------------------------------------------
+def _copy_csr(m: CSR) -> CSR:
+    return CSR(data=np.asarray(m.data).copy(), cols=np.asarray(m.cols).copy(),
+               indptr=np.asarray(m.indptr).copy(), shape=m.shape, nnz=m.nnz)
+
+
+def _poison(container: Any) -> None:
+    """The ``delta.corrupt`` fault's effect: break a structural invariant
+    so ``validate_container`` must catch it (arrays only — containers are
+    frozen dataclasses, their buffers are not)."""
+    if isinstance(container, CSR):
+        np.asarray(container.indptr)[-1] += 1
+    elif isinstance(container, BucketedELL):
+        np.asarray(container.perm)[0] = container.n_rows
+    else:  # generic: any container with an integer index array
+        for name in ("cols", "rows", "block_cols"):
+            arr = getattr(container, name, None)
+            if arr is not None and np.asarray(arr).size:
+                np.asarray(arr).reshape(-1)[0] = -10**6
+                break
+
+
+def apply_delta(csr: CSR, delta: DeltaBatch, *, container: Any = None,
+                fmt: str = "csr", transform_params: Optional[dict] = None,
+                registry: Optional[_faults.FaultRegistry] = None,
+                key: str = "", validate: bool = True) -> DeltaApplyResult:
+    """Apply one delta to a source CSR and (optionally) its transformed
+    container.
+
+    ``fmt``/``container`` name the bound serving format: ``csr`` and
+    ``sell`` are updated incrementally, anything else is rebuilt from the
+    updated CSR via the registered host transform (``mode="rebuild"``,
+    cost recorded).  When the ``delta.corrupt`` fault is armed the apply
+    runs copy-on-write so a poisoned candidate can be thrown away and
+    rebuilt cleanly."""
+    reg = registry if registry is not None else _faults.get()
+    armed = bool(reg.armed("delta.corrupt"))
+    t0 = time.perf_counter()
+    new_csr, mode, changed, old_lens, new_lens, app_lens = _apply_csr(
+        csr, delta, in_place=not armed)
+    if validate:
+        new_csr.validate()
+
+    fallback, reason, rebuilt = False, "", 0
+    params = dict(transform_params or {})
+    cand: Any
+    if fmt == "csr":
+        cand = _copy_csr(new_csr) if armed else new_csr
+    elif fmt == "sell" and isinstance(container, BucketedELL):
+        try:
+            cand, rebuilt = sell_apply(
+                container, new_csr, csr.n_rows, changed, old_lens, new_lens,
+                app_lens, copy=armed,
+                width_quantum=int(params.get("width_quantum", 8)))
+        except (MatrixValidationError, ValueError, IndexError) as e:
+            cand, fallback, reason = None, True, f"sell:{type(e).__name__}"
+    else:
+        cand, fallback, reason = None, True, "format"
+
+    if cand is not None and reg.should_fire("delta.corrupt"):
+        _poison(cand)
+    if cand is not None and validate:
+        try:
+            validate_container(cand)
+        except MatrixValidationError:
+            cand, fallback, reason = None, True, "corrupt"
+
+    if cand is None:
+        # degrade: full re-transform from the clean, already-updated CSR
+        from repro.core.plan import apply_transform
+        cand = apply_transform(fmt, new_csr, **params)
+        mode = "rebuild"
+        if validate:
+            validate_container(cand)
+    dt = time.perf_counter() - t0
+
+    tel = _obs.get()
+    if tel.enabled:
+        tel.counter("stream.applies", fmt=fmt, mode=mode).inc()
+        if fallback:
+            tel.counter("stream.fallbacks", fmt=fmt, reason=reason).inc()
+        tel.histogram("stream.apply_s", fmt=fmt).observe(dt)
+        tel.event("stream.delta", key=key, fmt=fmt, mode=mode,
+                  rows=int(changed.shape[0]), appends=delta.n_appends,
+                  nnz_delta=delta.nnz_delta, fallback=fallback,
+                  reason=reason, t_apply_s=dt)
+    return DeltaApplyResult(csr=new_csr, container=cand, fmt=fmt, mode=mode,
+                            fallback=fallback, fallback_reason=reason,
+                            t_apply_s=dt, buckets_rebuilt=rebuilt,
+                            appended_lens=app_lens, changed_rows=changed,
+                            old_lens=old_lens, new_lens=new_lens)
+
+
+def random_delta(rng: np.random.Generator, csr: CSR, *,
+                 n_appends: int = 0, n_updates: int = 0, n_deletes: int = 0,
+                 row_len: int = 8) -> DeltaBatch:
+    """A randomized delta for tests/benchmarks: appends draw fresh rows of
+    ~``row_len`` nonzeros; updates/deletes target uniformly random
+    coordinates (updates mix overwrites and inserts organically)."""
+    n_rows, n_cols = csr.shape
+    app_c, app_v = [], []
+    for _ in range(n_appends):
+        ln = max(1, min(n_cols, int(rng.integers(1, 2 * row_len + 1))))
+        app_c.append(np.sort(rng.choice(n_cols, size=ln,
+                                        replace=False)).astype(np.int64))
+        app_v.append(rng.standard_normal(ln).astype(np.float32))
+    upd_r = rng.integers(0, max(n_rows, 1),
+                         size=n_updates).astype(np.int64)
+    upd_c = rng.integers(0, n_cols, size=n_updates).astype(np.int64)
+    upd_v = rng.standard_normal(n_updates).astype(np.float32)
+    # steer half the deletes at stored entries so they actually bite
+    del_r, del_c = [], []
+    ip = np.asarray(csr.indptr)
+    cols = np.asarray(csr.cols)
+    for i in range(n_deletes):
+        if i % 2 == 0 and csr.nnz:
+            k = int(rng.integers(0, csr.nnz))
+            r = int(np.searchsorted(ip, k, side="right")) - 1
+            del_r.append(r)
+            del_c.append(int(cols[k]))
+        else:
+            del_r.append(int(rng.integers(0, max(n_rows, 1))))
+            del_c.append(int(rng.integers(0, n_cols)))
+    return DeltaBatch(
+        n_cols=n_cols, append_cols=tuple(app_c), append_vals=tuple(app_v),
+        update_rows=upd_r, update_cols=upd_c, update_vals=upd_v,
+        delete_rows=np.asarray(del_r, dtype=np.int64),
+        delete_cols=np.asarray(del_c, dtype=np.int64))
+
+
+__all__ = ["DELTA_SCHEMA_VERSION", "INCREMENTAL_FORMATS", "DeltaBatch",
+           "DeltaApplyResult", "apply_delta", "sell_apply", "random_delta"]

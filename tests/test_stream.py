@@ -1,0 +1,389 @@
+"""Dynamic matrices: incremental transforms (DeltaBatch), drift-triggered
+re-planning with hysteresis, workload capture/replay through the off-line
+phase, and the satellites riding along — plan-store LRU eviction, the
+breaker-state gauge, RPL010 stream-artifact lint, and the ``delta.corrupt``
+chaos fault.  Dense parity always checks against ``CSR.todense()`` (which
+accumulates duplicate coordinates with ``np.add.at``, matching the
+segment-sum SpMV semantics) — never against fancy-indexed dense builds,
+which silently collapse duplicates."""
+import numpy as np
+import pytest
+
+import repro.obs as obs
+from repro.analyze.planlint import lint_plan
+from repro.core.autotune import TuningDB, decide_paper
+from repro.core.formats import CSR, MatrixStats
+from repro.core.plan import ExecutionPlan, Planner
+from repro.core.plan_store import PlanStore
+from repro.core.transform import csr_from_dense
+from repro.obs import FakeClock, InMemorySink, Telemetry
+from repro.obs.export import prometheus_text
+from repro.serve import faults
+from repro.serve.guard import CLOSED, OPEN, STATE_CODES
+from repro.serve.spmv_service import SpMVService
+from repro.stream.capture import TraceCapture, load_trace
+from repro.stream.delta import (INCREMENTAL_FORMATS, DeltaBatch, apply_delta,
+                                random_delta)
+from repro.stream.drift import (DriftSketch, ReplanPolicy,
+                                StreamingPlannedMatrix)
+from repro.stream.replay import epochs_of, replay_file
+
+
+@pytest.fixture()
+def tel():
+    t = Telemetry(enabled=True, clock=FakeClock(), sinks=[InMemorySink()])
+    prev = obs.set_default(t)
+    yield t
+    obs.set_default(prev)
+
+
+@pytest.fixture(autouse=True)
+def clean_faults():
+    faults.clear()
+    yield
+    faults.clear()
+
+
+def _problem(seed=7, shape=(40, 64), density=0.15):
+    rng = np.random.default_rng(seed)
+    d = (rng.random(shape) < density).astype(np.float32)
+    dense = d * rng.normal(1.0, 1.0, size=d.shape).astype(np.float32)
+    return rng, csr_from_dense(dense, pad=8)
+
+
+def _uniform(n_rows=32, n_cols=256, row_len=4, seed=3):
+    """Every row exactly ``row_len`` nonzeros -> sigma = 0, D_mat = 0."""
+    rng = np.random.default_rng(seed)
+    dense = np.zeros((n_rows, n_cols), dtype=np.float32)
+    for i in range(n_rows):
+        cols = rng.choice(n_cols, size=row_len, replace=False)
+        dense[i, cols] = rng.normal(size=row_len).astype(np.float32)
+    return csr_from_dense(dense, pad=8)
+
+
+def _assert_parity(sm, rng, batch=1, rtol=2e-4):
+    n = sm.csr.n_cols
+    x = rng.normal(size=(n, batch)).astype(np.float32) if batch > 1 \
+        else rng.normal(size=n).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(sm @ x), sm.csr.todense() @ x,
+                               rtol=rtol, atol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# the DeltaBatch artifact
+# ---------------------------------------------------------------------------
+def test_delta_roundtrip_preserves_semantics():
+    rng, csr = _problem()
+    delta = random_delta(rng, csr, n_appends=2, n_updates=4, n_deletes=3)
+    back = DeltaBatch.from_dict(delta.to_dict())
+    a = apply_delta(csr, delta, fmt="csr").csr.todense()
+    b = apply_delta(csr, back, fmt="csr").csr.todense()
+    np.testing.assert_array_equal(a, b)
+
+
+def test_delta_validate_rejects_malformed():
+    with pytest.raises(ValueError, match="n_cols"):
+        DeltaBatch(n_cols=0).validate()
+    with pytest.raises(ValueError, match="column out of"):
+        DeltaBatch(n_cols=4,
+                   append_cols=(np.asarray([0, 9]),),
+                   append_vals=(np.asarray([1.0, 2.0]),)).validate()
+    with pytest.raises(ValueError, match="appended rows cannot"):
+        DeltaBatch(n_cols=4,
+                   update_rows=np.asarray([10]),
+                   update_cols=np.asarray([0]),
+                   update_vals=np.asarray([1.0])).validate(n_rows=5)
+
+
+# ---------------------------------------------------------------------------
+# dense-oracle parity after randomized delta sequences
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", list(INCREMENTAL_FORMATS))
+@pytest.mark.parametrize("batch", [1, 8])
+def test_incremental_parity_randomized(fmt, batch):
+    rng, csr = _problem(seed=11)
+    sm = StreamingPlannedMatrix(csr, Planner(), plan_kw={"fmt": fmt})
+    assert sm.fmt == fmt
+    modes = []
+    for step in range(4):
+        delta = random_delta(rng, sm.csr, n_appends=step % 2 + 1,
+                             n_updates=4, n_deletes=3)
+        res = sm.apply(delta)
+        assert not res.fallback, res.fallback_reason
+        modes.append(res.mode)
+        _assert_parity(sm, rng, batch=batch)
+    # the whole point: the container was edited, not re-transformed
+    assert set(modes) & {"inplace", "append", "splice"}
+    assert sm.replans == 0 and sm.fallbacks == 0
+
+
+def test_sketch_tracks_row_length_stats_exactly():
+    rng, csr = _problem(seed=23)
+    sm = StreamingPlannedMatrix(csr, Planner(), plan_kw={"fmt": "csr"})
+    for _ in range(5):
+        sm.apply(random_delta(rng, sm.csr, n_appends=2, n_updates=5,
+                              n_deletes=4))
+    fresh = DriftSketch.of(sm.csr)
+    assert sm.sketch.n == fresh.n
+    assert sm.sketch.nnz == fresh.nnz
+    assert sm.sketch.sum_sq == pytest.approx(fresh.sum_sq)
+    np.testing.assert_array_equal(sm.sketch.hist, fresh.hist)
+    assert sm.sketch.d_mat == pytest.approx(fresh.d_mat)
+
+
+# ---------------------------------------------------------------------------
+# drift: hysteresis and the paper-rule re-plan
+# ---------------------------------------------------------------------------
+def test_oscillation_near_boundary_never_replans():
+    pol = ReplanPolicy(d_star=1.0, hysteresis=0.15, fmt="sell",
+                       min_deltas_between=0)
+    for i in range(20):
+        d_mat = 1.1 if i % 2 else 0.9       # hops the boundary every step
+        dec = pol.decide(d_mat, current_fmt="sell")
+        assert not dec.replan
+        assert dec.reason in ("stable", "hysteresis")
+    # outside the dead band the same crossing does fire
+    assert pol.decide(1.5, current_fmt="sell").replan
+
+
+def test_streaming_matrix_oscillation_zero_replans(tel):
+    rng, csr = _problem(seed=5, shape=(80, 64))
+    d0 = MatrixStats.of(csr).d_mat
+    pol = ReplanPolicy(d_star=d0 / 1.05, hysteresis=0.15, fmt="sell",
+                       min_deltas_between=0)
+    sm = StreamingPlannedMatrix(csr, Planner(), plan_kw={"fmt": "sell"},
+                                policy=pol)
+    for _ in range(4):
+        sm.apply(random_delta(rng, sm.csr, n_updates=3, n_deletes=2))
+        assert sm.last_decision.reason in ("stable", "hysteresis")
+        _assert_parity(sm, rng)
+    assert sm.replans == 0
+    assert not any(k.startswith("stream.replans")
+                   for k in tel.snapshot()["counters"])
+
+
+def test_drifted_matrix_replans_to_paper_pick(tel):
+    db = TuningDB(machine="test", c=1.0, records=[], d_star={"sell": 1.0})
+    csr = _uniform()
+    pol = ReplanPolicy(db=db, fmt="sell", min_deltas_between=1)
+    sm = StreamingPlannedMatrix(csr, Planner(db=db, rule="paper"),
+                                plan_kw={"formats": ("sell",)}, policy=pol)
+    assert sm.fmt == "sell" and sm.d_mat == 0.0
+    # one 200-nnz row against uniform 4-nnz rows: D_mat jumps past D*
+    cols = np.arange(200, dtype=np.int64)
+    sm.apply(DeltaBatch(n_cols=csr.n_cols, append_cols=(cols,),
+                        append_vals=(np.ones(200, dtype=np.float32),)))
+    assert sm.replans == 1
+    scratch = decide_paper(db, MatrixStats.of(sm.csr), fmt="sell")
+    assert sm.fmt == scratch.fmt == "csr"
+    rng = np.random.default_rng(0)
+    _assert_parity(sm, rng)
+    assert any(k.startswith("stream.replans")
+               for k in tel.snapshot()["counters"])
+
+
+# ---------------------------------------------------------------------------
+# the serving integration
+# ---------------------------------------------------------------------------
+def test_service_streaming_parity_and_breaker_survival():
+    rng, csr = _problem(seed=13)
+    svc = SpMVService(max_batch=4)
+    plan = Planner().plan(csr, fmt="sell")
+    svc.register("m", csr, measure_baseline=False, plan=plan, streaming=True)
+    br0 = svc._breaker("m", "sell", "spmv") if hasattr(svc, "_breaker") \
+        else None
+    for _ in range(4):
+        delta = random_delta(rng, svc.entries["m"].source, n_appends=1,
+                             n_updates=4, n_deletes=2)
+        res = svc.apply_delta("m", delta)
+        assert not res.fallback
+        entry = svc.entries["m"]
+        x = rng.normal(size=64).astype(np.float32)
+        np.testing.assert_allclose(np.asarray(svc.spmv("m", x)),
+                                   entry.source.todense() @ x,
+                                   rtol=2e-4, atol=2e-4)
+    entry = svc.entries["m"]
+    assert entry.deltas == 4 and entry.replans == 0
+    st = svc.stats()["m"]["streaming"]
+    assert st["deltas"] == 4 and st["replans"] == 0 and "d_mat" in st
+    if br0 is not None:    # breakers are service-owned: same object all along
+        assert svc._breaker("m", "sell", "spmv") is br0
+
+
+def test_service_nonleaf_operator_rebuilds(tel):
+    rng, csr = _problem(seed=17)
+    svc = SpMVService()
+    plan = Planner().plan(csr, fmt="ell_row")   # not incrementally updatable
+    svc.register("m", csr, measure_baseline=False, plan=plan, streaming=True)
+    res = svc.apply_delta("m", random_delta(rng, csr, n_appends=1,
+                                            n_updates=3))
+    assert res.fallback and res.mode == "rebuild"
+    entry = svc.entries["m"]
+    x = rng.normal(size=64).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(svc.spmv("m", x)),
+                               entry.source.todense() @ x,
+                               rtol=2e-4, atol=2e-4)
+    # the rebuild re-derives the sketch exactly (no double counting)
+    fresh = DriftSketch.of(entry.source)
+    assert entry.sketch.n == fresh.n and entry.sketch.nnz == fresh.nnz
+
+
+def test_service_apply_delta_requires_streaming():
+    _, csr = _problem()
+    svc = SpMVService()
+    svc.register("m", csr, measure_baseline=False)
+    with pytest.raises(ValueError, match="streaming=True"):
+        svc.apply_delta("m", DeltaBatch(n_cols=csr.n_cols))
+
+
+def test_service_streaming_rejects_sharded_plans():
+    _, csr = _problem()
+    plan = Planner().plan_sharded(csr, n_shards=2)
+    svc = SpMVService()
+    with pytest.raises(ValueError, match="sharded"):
+        svc.register("m", csr, measure_baseline=False, plan=plan,
+                     streaming=True)
+
+
+# ---------------------------------------------------------------------------
+# chaos: a corrupted delta apply degrades to a clean full re-transform
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", list(INCREMENTAL_FORMATS))
+def test_delta_corrupt_fault_degrades_to_rebuild(fmt, tel):
+    rng, csr = _problem(seed=29)
+    sm = StreamingPlannedMatrix(csr, Planner(), plan_kw={"fmt": fmt})
+    delta = random_delta(rng, sm.csr, n_appends=1, n_updates=3, n_deletes=2)
+    with faults.inject("delta.corrupt", prob=1.0):
+        res = sm.apply(delta)
+    assert res.fallback and res.fallback_reason == "corrupt"
+    assert res.mode == "rebuild"
+    _assert_parity(sm, rng)                 # costs time, never correctness
+    fb = [k for k in tel.snapshot()["counters"]
+          if k.startswith("stream.fallbacks")]
+    assert fb
+
+
+# ---------------------------------------------------------------------------
+# capture -> replay -> offline_phase round trip (FakeClock, deterministic)
+# ---------------------------------------------------------------------------
+def test_capture_replay_roundtrip(tmp_path):
+    rng, base = _problem(seed=31)
+    path = str(tmp_path / "trace.jsonl")
+    cap = TraceCapture(path, clock=FakeClock(tick=1.0))
+    sm = StreamingPlannedMatrix(base, Planner(), plan_kw={"fmt": "csr"},
+                                capture=cap, key="web")
+    deltas = []
+    for n_q in (3, 2, 1):
+        for _ in range(n_q):
+            sm @ rng.normal(size=base.n_cols).astype(np.float32)
+        d = random_delta(rng, sm.csr, n_appends=1, n_updates=3, n_deletes=2)
+        deltas.append(d)
+        sm.apply(d)
+    sm @ rng.normal(size=base.n_cols).astype(np.float32)
+    cap.close()
+
+    trace = load_trace(path)
+    ts = [r["t"] for r in trace]
+    assert ts == sorted(ts) and len(set(ts)) == len(ts)   # FakeClock ticks
+    assert trace[0]["kind"] == "stream.base"
+    assert sum(r["kind"] == "stream.delta" for r in trace) == 3
+
+    # epochs reconstruct the exact matrix history (fresh base: the live
+    # streaming matrix mutated its arrays in place)
+    _, base2 = _problem(seed=31)
+    epochs, stats = epochs_of(trace, base2)
+    assert stats.n_queries == 7 and stats.n_deltas == 3
+    assert stats.n_epochs == 4 and stats.k_hat == pytest.approx(7 / 4)
+    np.testing.assert_array_equal(epochs[-1][1].todense(), sm.csr.todense())
+    cur = base2
+    for d in deltas[:1]:
+        cur = apply_delta(cur, d, fmt="csr").csr
+    np.testing.assert_array_equal(epochs[1][1].todense(), cur.todense())
+
+    # the replayed epochs are a real offline_phase measurement suite
+    _, base3 = _problem(seed=31)
+    db, rstats = replay_file(path, base3, formats=("sell",), iters=1,
+                             machine="trace")
+    assert rstats.n_epochs == 4 and rstats.batch == 1
+    assert "sell" in db.d_star and db.machine == "trace"
+
+
+# ---------------------------------------------------------------------------
+# RPL010: stream artifacts are linted like any other plan JSON
+# ---------------------------------------------------------------------------
+def test_rpl010_clean_artifacts_pass():
+    rng, csr = _problem(seed=37)
+    delta = random_delta(rng, csr, n_appends=1, n_updates=2, n_deletes=1)
+    assert lint_plan(delta.to_dict()) == []
+    sm = StreamingPlannedMatrix(csr, Planner(), plan_kw={"fmt": "csr"})
+    sm.apply(delta)
+    findings = lint_plan(sm.to_dict())
+    assert not [f for f in findings if f.severity == "error"]
+
+
+def test_rpl010_flags_malformed_artifacts():
+    rng, csr = _problem(seed=37)
+    bad = DeltaBatch(n_cols=csr.n_cols).to_dict()
+    bad["n_cols"] = 0
+    errs = [f for f in lint_plan(bad) if f.severity == "error"]
+    assert errs and all(f.rule == "RPL010" for f in errs)
+
+    bad2 = random_delta(rng, csr, n_updates=2).to_dict()
+    bad2["updates"]["cols"] = [csr.n_cols + 5] * 2
+    assert any(f.rule == "RPL010" and f.severity == "error"
+               for f in lint_plan(bad2))
+
+    sm = StreamingPlannedMatrix(csr, Planner(), plan_kw={"fmt": "csr"})
+    sp = sm.to_dict()
+    sp["policy"]["hysteresis"] = 1.5
+    sp["sketch"]["hist"] = [1] + sp["sketch"]["hist"][1:]
+    rules = {(f.rule, f.severity) for f in lint_plan(sp)}
+    assert ("RPL010", "error") in rules
+
+
+# ---------------------------------------------------------------------------
+# satellite: PlanStore LRU eviction
+# ---------------------------------------------------------------------------
+def test_plan_store_lru_eviction(tmp_path, tel):
+    import os
+    store = PlanStore(str(tmp_path / "plans"), max_entries=3)
+    for i, k in enumerate(("a", "b", "c")):
+        store.put(k, ExecutionPlan(fmt="csr"))
+        os.utime(store.path_for(k), (1000.0 + i, 1000.0 + i))
+    assert store.get("a") is not None       # hit refreshes recency to now
+    store.put("d", ExecutionPlan(fmt="csr"))
+    assert set(store.keys()) == {"a", "c", "d"}   # "b" was coldest
+    assert store.evictions == 1
+    assert store.stats()["max_entries"] == 3
+    assert any(k.startswith("store.evict")
+               for k in tel.snapshot()["counters"])
+    with pytest.raises(ValueError, match="max_entries"):
+        PlanStore(str(tmp_path / "p2"), max_entries=0)
+
+
+# ---------------------------------------------------------------------------
+# satellite: breaker state machine as a labelled gauge
+# ---------------------------------------------------------------------------
+def test_breaker_state_gauge_exports(tel):
+    rng, csr = _problem(seed=41, shape=(80, 64))
+    clk = FakeClock()
+    svc = SpMVService(clock=clk, breaker_failures=2, breaker_cooldown_s=10.0)
+    svc.register("m", csr, measure_baseline=False)
+    x = rng.normal(size=64).astype(np.float32)
+    with faults.inject("kernel.raise", prob=1.0):
+        for _ in range(2):
+            svc.spmv("m", x)
+
+    def gauge_values():
+        return {k: v for k, v in tel.snapshot()["gauges"].items()
+                if k.startswith("service.breaker_state") and "op=spmv" in k}
+
+    vals = gauge_values()
+    assert vals and set(vals.values()) == {float(STATE_CODES[OPEN])}
+    g = svc.stats()["m"]["guard"]["spmv"]["breaker"]
+    assert g["state_code"] == STATE_CODES[OPEN]
+    assert "service_breaker_state" in prometheus_text(tel)
+
+    clk.advance(10.0)
+    svc.spmv("m", x)                        # clean half-open probe closes it
+    assert set(gauge_values().values()) == {float(STATE_CODES[CLOSED])}
